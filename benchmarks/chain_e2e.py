@@ -1,0 +1,59 @@
+"""End-to-end chain serving (§4 synthesis + Figure 3): a three-stage model
+pipeline served with freshen OFF vs ON.  With freshen ON, invoking stage k
+dispatches freshen for stage k+1 inside the trigger window, so stage k+1's
+critical path drops the weight-load/compile/warmup.  All times are real wall
+time (real XLA compiles, real checkpoint IO)."""
+import dataclasses
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+
+def _build_engine(freshen_chain: bool):
+    from repro.configs import get_config
+    from repro.models import make_model
+    from repro.serving import Executor, ModelEndpoint, ServingEngine, WeightStore
+
+    root = tempfile.mkdtemp(prefix="chain-")
+    store = WeightStore(root)
+    eng = ServingEngine()
+    names = ["ingest", "analyze", "publish"]
+    for i, name in enumerate(names):
+        cfg = get_config("qwen2-0.5b").reduced(d_model=128 + 32 * i)
+        cfg = dataclasses.replace(cfg, vocab_size=256)
+        store.publish(name, make_model(cfg).init(jax.random.PRNGKey(i)))
+        eng.deploy(ModelEndpoint(name, cfg, store, Executor(), batch_size=2,
+                                 seq_len=16))
+    if freshen_chain:
+        eng.chain(names)
+    return eng, names
+
+
+def run():
+    rows = []
+    toks = np.zeros((2, 16), np.int32)
+    for mode in ["off", "on"]:
+        eng, names = _build_engine(freshen_chain=(mode == "on"))
+        stage_times = {}
+        t_wall0 = time.monotonic()
+        for name in names:
+            if mode == "on" and name != names[0]:
+                # trigger-window delay between stages (Table 1 direct ~60ms)
+                eng.scheduler.runtimes[name].join_freshen(timeout=60)
+            out = eng.invoke(name, toks,
+                             freshen_successors=(mode == "on"))
+            stage_times[name] = out["timing"]
+        wall = time.monotonic() - t_wall0
+        for name in names:
+            rows.append((f"chain/{mode}/{name}",
+                         stage_times[name]["total"] * 1e6,
+                         f"compile={stage_times[name]['compile']*1e3:.0f}ms"))
+        rows.append((f"chain/{mode}/wall", wall * 1e6, ""))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

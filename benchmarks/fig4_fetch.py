@@ -1,0 +1,43 @@
+"""Figure 4 analogue: file-retrieval time by size x locality tier — the
+execution time freshen saves when it prefetches the file off the critical
+path.  Uses the measured-constant connection model (DESIGN.md §2) over real
+disk blobs.
+"""
+import os
+import tempfile
+
+import numpy as np
+
+from repro.core.network import TIERS, Connection
+from repro.serving.datastore import TieredDatastore
+
+SIZES = [1 * 2**10, 32 * 2**10, 1 * 2**20, 8 * 2**20, 32 * 2**20,
+         128 * 2**20]                                  # 1KB .. 128MB
+ITERS = 20
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    root = tempfile.mkdtemp(prefix="fig4-")
+    for tier in ["local", "edge", "remote"]:
+        ds = TieredDatastore(os.path.join(root, tier), tier=tier)
+        for size in SIZES:
+            key = f"blob{size}"
+            ds.put(key, b"x" * size)
+            times = []
+            for _ in range(ITERS):
+                conn = ds.connect()                     # fresh conn each time
+                conn.establish()
+                _, t = ds.get(key, conn)
+                times.append(t)
+            med = float(np.median(times))
+            label = (f"{size//1024}KB" if size < 2**20
+                     else f"{size//2**20}MB")
+            rows.append((f"fig4/{tier}/{label}", med * 1e6,
+                         f"freshen_saves={med*1e3:.2f}ms"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

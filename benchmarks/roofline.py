@@ -1,0 +1,56 @@
+"""Aggregate the dry-run JSONs into the §Roofline table (one row per
+arch x shape x mesh): three terms, dominant bottleneck, useful-FLOP ratio."""
+import glob
+import json
+import os
+
+OUT_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_rows():
+    rows = []
+    for path in sorted(glob.glob(os.path.join(OUT_DIR, "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        if d.get("status") != "ok" or "roofline" not in d:
+            continue
+        r = d["roofline"]
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+            "compute_s": r["compute_seconds"],
+            "memory_s": r["memory_seconds"],
+            "collective_s": r["collective_seconds"],
+            "dominant": r["dominant"],
+            "useful_ratio": r["useful_flop_ratio"],
+            "compile_s": d.get("compile_seconds", 0),
+        })
+    return rows
+
+
+def run():
+    out = []
+    for r in load_rows():
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        out.append((name, bound * 1e6,
+                    f"dominant={r['dominant']} useful={r['useful_ratio']:.2f}"))
+    return out
+
+
+def markdown_table() -> str:
+    rows = load_rows()
+    lines = ["| arch | shape | mesh | compute (ms) | memory (ms) | "
+             "collective (ms) | dominant | useful FLOP ratio |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']*1e3:.3f} | {r['memory_s']*1e3:.3f} "
+            f"| {r['collective_s']*1e3:.3f} | {r['dominant']} "
+            f"| {r['useful_ratio']:.2f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,35 @@
+"""Benchmark harness: one module per paper table/figure + the roofline
+aggregation.  Prints ``name,us_per_call,derived`` CSV (and a summary)."""
+import sys
+import time
+
+
+def main() -> None:
+    mods = []
+    from benchmarks import (chain_e2e, fig4_fetch, fig5_warming,
+                            prediction_quality, roofline, table1_triggers)
+    mods = [("table1_triggers", table1_triggers),
+            ("fig4_fetch", fig4_fetch),
+            ("fig5_warming", fig5_warming),
+            ("chain_e2e", chain_e2e),
+            ("prediction_quality", prediction_quality),
+            ("roofline", roofline)]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for name, mod in mods:
+        if only and only != name:
+            continue
+        t0 = time.monotonic()
+        try:
+            rows = mod.run()
+        except Exception as e:
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}")
+            continue
+        for r in rows:
+            print(",".join(str(x) for x in r))
+        print(f"# {name} finished in {time.monotonic()-t0:.1f}s",
+              file=sys.stderr)
+
+
+if __name__ == '__main__':
+    main()

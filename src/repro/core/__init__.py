@@ -1,0 +1,12 @@
+"""repro.core — the paper's contribution: the freshen primitive and its
+surrounding platform machinery (prediction, scheduling, accounting,
+inference, triggers).  Model-agnostic; binds to JAX via repro.serving."""
+from repro.core.accounting import Accountant, AppBill, ServiceClass  # noqa: F401
+from repro.core.cache import FreshenCache  # noqa: F401
+from repro.core.freshen import (Action, FreshenPlan, FreshenState, FrState,  # noqa: F401
+                                PlanEntry)
+from repro.core.network import TIERS, Connection, Tier  # noqa: F401
+from repro.core.prediction import (ChainGraph, HybridPredictor,  # noqa: F401
+                                   MarkovPredictor, Prediction)
+from repro.core.runtime import FunctionSpec, RunContext, Runtime  # noqa: F401
+from repro.core.scheduler import FreshenScheduler  # noqa: F401

@@ -1,0 +1,115 @@
+"""Billing, accounting, and abuse policy (§3.3 "Billing and accounting" /
+"Preventing abuse and misconfiguration").
+
+* The application owner pays for freshen (attributed separately from
+  function compute so the bill is inspectable).
+* Misprediction tracking: a freshen whose function does not arrive within a
+  horizon is a misprediction; sustained inaccuracy disables freshen
+  ("Metrics ... could be used to stop freshen from running if predictions
+  have been too inaccurate").
+* Service classes: aggressive freshen for latency-sensitive apps, disabled
+  for latency-insensitive ones.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Dict, Optional
+
+
+class ServiceClass(Enum):
+    LATENCY_SENSITIVE = "latency_sensitive"   # aggressive freshen
+    STANDARD = "standard"
+    BATCH = "batch"                           # freshen disabled
+
+    @property
+    def confidence_threshold(self) -> Optional[float]:
+        return {ServiceClass.LATENCY_SENSITIVE: 0.2,
+                ServiceClass.STANDARD: 0.5,
+                ServiceClass.BATCH: None}[self]   # None => never freshen
+
+
+@dataclass
+class AppBill:
+    function_seconds: float = 0.0
+    freshen_seconds: float = 0.0
+    freshen_invocations: int = 0
+    function_invocations: int = 0
+    mispredicted_freshens: int = 0
+    useful_freshens: int = 0
+
+    @property
+    def freshen_overhead_ratio(self) -> float:
+        total = self.function_seconds + self.freshen_seconds
+        return self.freshen_seconds / total if total else 0.0
+
+
+class Accountant:
+    """Per-application ledger + the confidence gate."""
+
+    def __init__(self, misprediction_horizon: float = 5.0,
+                 disable_after: int = 10, disable_miss_rate: float = 0.8):
+        self.horizon = misprediction_horizon
+        self.disable_after = disable_after
+        self.disable_miss_rate = disable_miss_rate
+        self._bills: Dict[str, AppBill] = {}
+        self._pending: Dict[str, list] = {}       # fn -> [freshen_ts, ...]
+        self._lock = threading.Lock()
+        self.service_class: Dict[str, ServiceClass] = {}
+
+    def bill(self, app: str) -> AppBill:
+        with self._lock:
+            return self._bills.setdefault(app, AppBill())
+
+    # ------------------------------------------------------------------
+    def record_freshen(self, app: str, fn: str, seconds: float,
+                       now: Optional[float] = None):
+        now = time.monotonic() if now is None else now
+        with self._lock:
+            b = self._bills.setdefault(app, AppBill())
+            b.freshen_seconds += seconds
+            b.freshen_invocations += 1
+            self._pending.setdefault(fn, []).append(now)
+
+    def record_invocation(self, app: str, fn: str, seconds: float,
+                          now: Optional[float] = None):
+        now = time.monotonic() if now is None else now
+        with self._lock:
+            b = self._bills.setdefault(app, AppBill())
+            b.function_seconds += seconds
+            b.function_invocations += 1
+            pend = self._pending.get(fn, [])
+            matched = [t for t in pend if now - t <= self.horizon]
+            expired = [t for t in pend if now - t > self.horizon]
+            b.useful_freshens += len(matched)
+            b.mispredicted_freshens += len(expired)
+            self._pending[fn] = []
+
+    def sweep_expired(self, app: str, now: Optional[float] = None):
+        """Charge freshens whose function never arrived as mispredictions."""
+        now = time.monotonic() if now is None else now
+        with self._lock:
+            b = self._bills.setdefault(app, AppBill())
+            for fn, pend in self._pending.items():
+                expired = [t for t in pend if now - t > self.horizon]
+                b.mispredicted_freshens += len(expired)
+                self._pending[fn] = [t for t in pend if now - t <= self.horizon]
+
+    # ------------------------------------------------------------------
+    def should_freshen(self, app: str, confidence: float) -> bool:
+        cls = self.service_class.get(app, ServiceClass.STANDARD)
+        thresh = cls.confidence_threshold
+        if thresh is None:
+            return False
+        if confidence < thresh:
+            return False
+        with self._lock:
+            b = self._bills.setdefault(app, AppBill())
+            total = b.useful_freshens + b.mispredicted_freshens
+            if total >= self.disable_after:
+                miss_rate = b.mispredicted_freshens / total
+                if miss_rate > self.disable_miss_rate:
+                    return False                 # accuracy gate tripped
+        return True

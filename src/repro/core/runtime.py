@@ -1,0 +1,120 @@
+"""The language-runtime / container model (§2 "Serverless runtime reuse").
+
+Mirrors OpenWhisk's lifecycle: a container is created (cold), its ``init``
+hook loads the function code and starts the persistent runtime, and each
+``run`` hook executes the function.  We add the paper's third hook:
+``freshen``, which executes the function's FreshenPlan in a separate thread
+(§3.1 — non-blocking; the run hook's logic and timing are unmodified).
+
+Runtime-scoped state (``Runtime.scope``) survives across invocations within
+the container, exactly like runtime-scoped variables in the paper; the
+``FreshenState`` and ``FreshenCache`` live there.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+from repro.core.cache import FreshenCache
+from repro.core.freshen import FreshenPlan, FreshenState
+
+
+@dataclass
+class FunctionSpec:
+    """Developer-provided function: code + (optional) freshen plan factory.
+
+    ``code(ctx, args)`` receives a RunContext (runtime scope + fr wrappers)
+    and the invocation arguments.  ``plan_factory(runtime)`` builds the
+    ordered FreshenPlan; it may be developer-written (§3.3 "simplest
+    implementation") or inferred (repro.core.infer).
+    """
+    name: str
+    code: Callable[["RunContext", Any], Any]
+    plan_factory: Optional[Callable[["Runtime"], FreshenPlan]] = None
+    app: str = "default"
+    init_fn: Optional[Callable[["Runtime"], None]] = None
+
+
+class RunContext:
+    """What the function sees: runtime scope + FrFetch/FrWarm wrappers."""
+
+    def __init__(self, runtime: "Runtime"):
+        self.runtime = runtime
+        self.scope = runtime.scope                 # runtime-scoped variables
+
+    def fr_fetch(self, idx: int, code: Optional[Callable[[], Any]] = None):
+        return self.runtime.fr_state.fr_fetch(idx, code)
+
+    def fr_warm(self, idx: int, warm: Optional[Callable[[], Any]] = None):
+        return self.runtime.fr_state.fr_warm(idx, warm)
+
+
+class Runtime:
+    """One warm container + persistent language runtime for one function."""
+
+    def __init__(self, spec: FunctionSpec,
+                 cold_start_cost: float = 0.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.spec = spec
+        self.clock = clock
+        self.scope: Dict[str, Any] = {}            # runtime-scoped variables
+        self.cache = FreshenCache()
+        self.initialized = False
+        self.cold_start_cost = cold_start_cost
+        self.fr_state: Optional[FreshenState] = None
+        self._freshen_threads: list[threading.Thread] = []
+        self.init_seconds = 0.0
+        self.run_count = 0
+        self.freshen_count = 0
+
+    # ------------------------------------------------------------------
+    def init(self):
+        """The init hook: start runtime, load code, build the freshen plan."""
+        t0 = self.clock()
+        if self.cold_start_cost:
+            time.sleep(self.cold_start_cost)
+        if self.spec.init_fn:
+            self.spec.init_fn(self)
+        plan = (self.spec.plan_factory(self) if self.spec.plan_factory
+                else FreshenPlan([]))
+        self.fr_state = FreshenState(plan, clock=self.clock)
+        self.initialized = True
+        self.init_seconds = self.clock() - t0
+
+    def _ensure_init(self):
+        if not self.initialized:
+            self.init()
+
+    # ------------------------------------------------------------------
+    def freshen(self, blocking: bool = False) -> Optional[threading.Thread]:
+        """The freshen hook (§3.1): run Algorithm 2 in a separate thread.
+        Receives no function arguments (abuse rule, §3.3)."""
+        self._ensure_init()
+        self.freshen_count += 1
+
+        def _run():
+            self.fr_state.freshen()
+
+        if blocking:
+            _run()
+            return None
+        th = threading.Thread(target=_run, name=f"freshen-{self.spec.name}",
+                              daemon=True)
+        th.start()
+        self._freshen_threads.append(th)
+        return th
+
+    def run(self, args: Any = None) -> Any:
+        """The run hook: execute the function (timing unmodified)."""
+        self._ensure_init()
+        self.run_count += 1
+        ctx = RunContext(self)
+        return self.spec.code(ctx, args)
+
+    def join_freshen(self, timeout: Optional[float] = None):
+        for th in self._freshen_threads:
+            th.join(timeout)
+        self._freshen_threads = [t for t in self._freshen_threads
+                                 if t.is_alive()]

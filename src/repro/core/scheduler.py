@@ -1,0 +1,109 @@
+"""The platform-side freshen scheduler (§2, §3.3): on every function
+invocation, predict the successors and dispatch ``freshen`` to their
+runtimes inside the trigger-delay window — gated by the Accountant's
+confidence/service-class/accuracy policy.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.core.accounting import Accountant
+from repro.core.prediction import HybridPredictor, Prediction
+from repro.core.runtime import FunctionSpec, Runtime
+
+
+@dataclass
+class FreshenEvent:
+    fn: str
+    confidence: float
+    dispatched: bool
+    reason: str
+    at: float = field(default_factory=time.monotonic)
+
+
+class FreshenScheduler:
+    """Global scheduling entity: runtimes + predictor + policy."""
+
+    def __init__(self, predictor: Optional[HybridPredictor] = None,
+                 accountant: Optional[Accountant] = None):
+        self.predictor = predictor or HybridPredictor()
+        self.accountant = accountant or Accountant()
+        self.runtimes: Dict[str, Runtime] = {}
+        self.events: List[FreshenEvent] = []
+        self._scopes: Dict[str, tuple] = {}      # chain-level shared scopes
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------------
+    def register(self, spec: FunctionSpec, runtime: Optional[Runtime] = None,
+                 scope_group: Optional[str] = None):
+        """``scope_group``: §6 "different isolation scopes" — functions in
+        the same group share runtime-scoped state (Azure-style chain-level
+        isolation): one ``scope`` dict and one ``FreshenCache``, so a
+        resource freshened for any member is visible to all of them.
+        Each member keeps its own fr_state (plans differ per function)."""
+        rt = runtime or Runtime(spec)
+        with self._lock:
+            if scope_group is not None:
+                shared = self._scopes.setdefault(
+                    scope_group, (rt.scope, rt.cache))
+                rt.scope, rt.cache = shared
+            self.runtimes[spec.name] = rt
+        return rt
+
+    def runtime(self, fn: str) -> Runtime:
+        return self.runtimes[fn]
+
+    # ------------------------------------------------------------------
+    def _dispatch_freshen(self, pred: Prediction):
+        rt = self.runtimes.get(pred.fn)
+        if rt is None:
+            self.events.append(FreshenEvent(pred.fn, pred.probability, False,
+                                            "no-runtime"))
+            return
+        app = rt.spec.app
+        if not self.accountant.should_freshen(app, pred.probability):
+            self.events.append(FreshenEvent(pred.fn, pred.probability, False,
+                                            "policy-gated"))
+            return
+        t0 = time.monotonic()
+        th = rt.freshen(blocking=False)
+        self.events.append(FreshenEvent(pred.fn, pred.probability, True,
+                                        "dispatched"))
+
+        def _account():
+            if th is not None:
+                th.join()
+            self.accountant.record_freshen(app, pred.fn,
+                                           time.monotonic() - t0)
+
+        threading.Thread(target=_account, daemon=True).start()
+
+    def on_invocation_start(self, fn: str):
+        """Called when fn begins: the best moment to freshen successors —
+        the successor will not start until fn finishes + trigger delay."""
+        self.predictor.observe(fn, time.monotonic())
+        for pred in self.predictor.successors(fn):
+            self._dispatch_freshen(pred)
+
+    # ------------------------------------------------------------------
+    def invoke(self, fn: str, args=None, freshen_successors: bool = True):
+        """Run fn through its runtime with full bookkeeping."""
+        rt = self.runtimes[fn]
+        if freshen_successors:
+            self.on_invocation_start(fn)
+        t0 = time.monotonic()
+        result = rt.run(args)
+        self.accountant.record_invocation(rt.spec.app, fn,
+                                          time.monotonic() - t0)
+        return result
+
+    def run_chain(self, fns: List[str], args=None,
+                  freshen: bool = True):
+        """Execute an explicit chain sequentially (orchestration-style)."""
+        out = args
+        for fn in fns:
+            out = self.invoke(fn, out, freshen_successors=freshen)
+        return out

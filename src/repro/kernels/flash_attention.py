@@ -1,0 +1,118 @@
+"""Pallas TPU flash-attention (prefill) kernel.
+
+Grid = (B, Hq, nq, nk) with the KV dimension innermost; the online-softmax
+running state (m, l, acc) lives in VMEM scratch and persists across the nk
+steps (TPU grids execute sequentially).  BlockSpecs tile Q/K/V into VMEM:
+one (q_blk × dh) query tile and one (kv_blk × dh) KV tile at a time, so VMEM
+footprint is q_blk·dh + 2·kv_blk·dh + q_blk·(dh + kv_blk) floats.  dh and the
+block minor dims should be multiples of 128 for MXU alignment on real TPUs;
+tests run interpret=True on CPU.
+
+GQA is expressed in the K/V index_map (query head h reads KV head h // G).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale, causal, window, softcap, q_blk, kv_blk, nk):
+    ki = pl.program_id(3)
+    qi = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                 # (q_blk, dh)
+    k = k_ref[0, 0].astype(jnp.float32)                 # (kv_blk, dh)
+    v = v_ref[0, 0].astype(jnp.float32)                 # (kv_blk, dv)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = qi * q_blk + jax.lax.broadcasted_iota(jnp.int32, (q_blk, kv_blk), 0)
+    kv_pos = ki * kv_blk + jax.lax.broadcasted_iota(jnp.int32, (q_blk, kv_blk), 1)
+    mask = jnp.ones((q_blk, kv_blk), jnp.bool_)
+    if causal:
+        mask &= q_pos >= kv_pos
+    if window is not None:
+        mask &= (q_pos - kv_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, *, causal=True, window=None, softcap=None,
+                           scale=None, q_blk=128, kv_blk=128,
+                           interpret=False):
+    """q: (B, Sq, Hq, dh); k/v: (B, Sk, Hkv, dh|dv) -> (B, Sq, Hq, dv)."""
+    B, Sq, Hq, dh = q.shape
+    _, Sk, Hkv, dv = v.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    q_blk = min(q_blk, Sq)
+    kv_blk = min(kv_blk, Sk)
+    assert Sq % q_blk == 0 and Sk % kv_blk == 0
+    nq, nk = Sq // q_blk, Sk // kv_blk
+
+    qh = q.transpose(0, 2, 1, 3)                        # (B, Hq, Sq, dh)
+    kh = k.transpose(0, 2, 1, 3)                        # (B, Hkv, Sk, dh)
+    vh = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, q_blk=q_blk, kv_blk=kv_blk, nk=nk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, q_blk, dh), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, kv_blk, dh),
+                         lambda b, h, qi, ki, G=G: (b, h // G, ki, 0)),
+            pl.BlockSpec((1, 1, kv_blk, dv),
+                         lambda b, h, qi, ki, G=G: (b, h // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, q_blk, dv),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, dv), q.dtype),
+        scratch_shapes=[
+            _vmem((q_blk,), jnp.float32),
+            _vmem((q_blk,), jnp.float32),
+            _vmem((q_blk, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+    return out.transpose(0, 2, 1, 3)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)

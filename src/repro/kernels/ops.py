@@ -1,0 +1,47 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``use_pallas``: on a real TPU backend this dispatches to the Mosaic-lowered
+kernels; on CPU (this container) ``interpret=True`` executes the kernel body
+in Python for correctness validation, and the model substrate defaults to the
+pure-jnp blockwise implementations (see DESIGN.md — the paper has no kernel
+contribution; kernels serve the framework's serving hot paths).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.decode_attention import decode_attention_kernel
+from repro.kernels.flash_attention import flash_attention_kernel
+from repro.kernels.rglru_scan import rglru_scan_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "softcap", "scale",
+                                   "q_blk", "kv_blk", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                    scale=None, q_blk=128, kv_blk=128, interpret=None):
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return flash_attention_kernel(
+        q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,
+        q_blk=q_blk, kv_blk=kv_blk, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("window", "softcap", "scale", "kv_blk",
+                                   "interpret"))
+def decode_attention(q, k_cache, v_cache, pos, *, window=None, softcap=None,
+                     scale=None, kv_blk=256, interpret=None):
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return decode_attention_kernel(
+        q, k_cache, v_cache, pos, window=window, softcap=softcap, scale=scale,
+        kv_blk=kv_blk, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("r_blk", "interpret"))
+def rglru_scan(a, b, h0=None, *, r_blk=256, interpret=None):
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return rglru_scan_kernel(a, b, h0, r_blk=r_blk, interpret=interpret)

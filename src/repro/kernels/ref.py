@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel (no chunking, no online softmax —
+the most literal formulation possible)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ref_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                  scale=None):
+    """q: (B,Sq,Hq,dh); k/v: (B,Sk,Hkv,dh|dv).  Naive full softmax."""
+    B, Sq, Hq, dh = q.shape
+    _, Sk, Hkv, dv = v.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    qh = q.reshape(B, Sq, Hkv, G, dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qh.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = jnp.arange(Sq)[:, None] + (Sk - Sq)
+    kv_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= q_pos >= kv_pos
+    if window is not None:
+        mask &= (q_pos - kv_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, dv).astype(q.dtype)
+
+
+def ref_decode_attention(q, k_cache, v_cache, pos, *, window=None,
+                         softcap=None, scale=None):
+    """Mirror of models.layers.decode_attention (including ring buffers)."""
+    from repro.models.layers import decode_attention
+    return decode_attention(q, k_cache, v_cache, pos, window=window,
+                            softcap=softcap, scale=scale)
+
+
+def ref_rglru_scan(a, b, h0=None):
+    """Literal sequential recurrence h_t = a_t h_{t-1} + b_t."""
+    B, S, r = a.shape
+    h = jnp.zeros((B, r), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, ab):
+        a_t, b_t = ab
+        h = a_t * h + b_t
+        return h, h
+
+    h, ys = jax.lax.scan(step, h, (a.transpose(1, 0, 2).astype(jnp.float32),
+                                   b.transpose(1, 0, 2).astype(jnp.float32)))
+    return ys.transpose(1, 0, 2), h

@@ -1,0 +1,394 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines, before any jax import: the dry-run (and ONLY
+# the dry-run) needs 512 placeholder host devices for the production meshes.
+
+"""Multi-pod dry-run: AOT ``.lower().compile()`` for every
+(architecture x input-shape x mesh) and the roofline ledger.
+
+Per combo:
+  * FULL program (scanned layers, chunked attention, microbatched) —
+    lower + compile must SUCCEED; records memory_analysis (per-device HBM),
+    raw cost_analysis, compile wall time, and the collective schedule.
+  * scan-free UNITS x exact multipliers — honest FLOP + collective ledger
+    (XLA counts while bodies once; see steps.py docstring).
+  * analytic HBM-traffic model — memory roofline term (documented in
+    EXPERIMENTS.md; cost-analysis byte counts are fusion-dependent and
+    meaningless for streamed attention).
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma2-27b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from collections import Counter
+
+import jax
+import numpy as np
+
+from repro.configs import INPUT_SHAPES, get_config, list_archs
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+from repro.launch import steps as steps_mod
+from repro.launch.steps import (TRAIN_MICROBATCHES, build_decode_step,
+                                build_prefill_step, build_train_step,
+                                build_units, _dryrun_cfg)
+from repro.models import make_model
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16}
+
+_COLL_RE = re.compile(
+    r"=\s+((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\]))\S*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_CONVERT_RE = re.compile(
+    r"%\S+ = f32\[([0-9,]+)\]\S* convert\(%(param|\S*arg)\S*\)")
+
+
+def convert_artifact_bytes(hlo_text: str) -> int:
+    """XLA:CPU has no native bf16 compute: it inserts f32 upcasts of whole
+    bf16 parameters (weights / KV caches), often hoisted out of layer scans.
+    These buffers do not exist on the TPU target (MXU consumes bf16), so we
+    quantify them and report a TPU-adjusted temp estimate."""
+    total = 0
+    seen = set()
+    for m in _CONVERT_RE.finditer(hlo_text):
+        dims = m.group(1)
+        if dims in seen:
+            continue
+        seen.add(dims)
+        n = 4
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        if n > 100 * 1024 * 1024:
+            total += n
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-device result bytes and op counts by collective type."""
+    bytes_by = Counter()
+    count_by = Counter()
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, op = m.group(1), m.group(2)
+        bytes_by[op] += _shape_bytes(shape_str)
+        count_by[op] += 1
+    return {"bytes": dict(bytes_by), "count": dict(count_by),
+            "total_bytes": sum(bytes_by.values())}
+
+
+# ----------------------------------------------------------------------
+def analytic_hbm_traffic(cfg, shape, n_chips: int) -> float:
+    """Per-device HBM bytes per step (documented model, EXPERIMENTS.md):
+
+    weights: read once per fwd pass (+remat fwd +bwd for training), sharded
+    across all chips; optimizer: p read/write + f32 moments read/write;
+    activations: ~12 d_model-sized streams per token per layer;
+    attention KV: each query chunk re-streams the full K/V (flash on TPU);
+    decode: whole KV cache read once + params read once.
+    """
+    P_total = cfg.param_count()
+    P_active = cfg.active_param_count()
+    d = cfg.d_model
+    L = cfg.n_layers
+    hd = cfg.resolved_head_dim
+    B, S = shape.global_batch, shape.seq_len
+    bytes_p = 2
+
+    if shape.mode == "train":
+        tokens = B * S
+        w = 3 * P_total * bytes_p                      # fwd + remat + bwd
+        w += P_total * (2 * bytes_p + 16) + P_total * 4    # adamw + grads
+        act = 12 * tokens * d * bytes_p * L
+        nq = max(1, S // cfg.q_chunk)
+        kv = 2 * nq * B * S * cfg.n_kv_heads * hd * bytes_p * L * 3
+        logits = 2 * tokens * cfg.vocab_size * bytes_p // max(1, S // 512)
+        total = w + act + kv + logits
+    elif shape.mode == "prefill":
+        tokens = B * S
+        w = P_active * bytes_p if cfg.moe else P_total * bytes_p
+        act = 12 * tokens * d * bytes_p * L
+        nq = max(1, S // cfg.q_chunk)
+        kv = 2 * nq * B * S * cfg.n_kv_heads * hd * bytes_p * L
+        cache_write = 2 * B * S * cfg.n_kv_heads * hd * bytes_p * L
+        total = w + act + kv + cache_write
+    else:                                              # decode (1 token)
+        w = (P_active if cfg.moe else P_total) * bytes_p
+        cache = _cache_bytes(cfg, B, S)
+        act = 12 * B * d * bytes_p * L
+        total = w + cache + act
+    return total / n_chips
+
+
+def _cache_bytes(cfg, B, S) -> float:
+    total = 0.0
+    for kind in cfg.layer_kinds:
+        if kind in ("attn", "attn_moe"):
+            total += 2 * B * S * cfg.n_kv_heads * cfg.resolved_head_dim * 2
+        elif kind == "attn_local":
+            L = min(S, cfg.window_size or S)
+            total += 2 * B * L * cfg.n_kv_heads * cfg.resolved_head_dim * 2
+        elif kind in ("mla", "mla_moe"):
+            total += B * S * (cfg.mla.kv_lora_rank + cfg.mla.rope_head_dim) * 2
+        elif kind == "rglru":
+            r = cfg.rglru.d_rnn or cfg.d_model
+            total += B * r * 4
+        elif kind == "mlstm":
+            di = int(cfg.d_model * cfg.xlstm.proj_factor_mlstm)
+            total += B * cfg.n_heads * (di // cfg.n_heads) ** 2 * 4
+        elif kind == "slstm":
+            total += 4 * B * cfg.d_model * 4
+    return total
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N_active·D (train) / 2·N_active·D (inference)."""
+    N = cfg.active_param_count()
+    if shape.mode == "train":
+        return 6.0 * N * shape.global_batch * shape.seq_len
+    if shape.mode == "prefill":
+        return 2.0 * N * shape.global_batch * shape.seq_len
+    return 2.0 * N * shape.global_batch                 # one token per row
+
+
+# ----------------------------------------------------------------------
+def apply_overrides(cfg, overrides: dict):
+    """Perf-iteration knobs (EXPERIMENTS.md §Perf):
+    strategy=tp|dp_cp|auto, mla_decode=absorbed|naive,
+    moe_dispatch=einsum|gather, use_tri=0|1, microbatches=N."""
+    import dataclasses as dc
+    if "strategy" in overrides:
+        cfg = dc.replace(cfg, serve_strategy=overrides["strategy"])
+    if "mla_decode" in overrides and cfg.mla:
+        cfg = dc.replace(cfg, mla=dc.replace(
+            cfg.mla, decode_mode=overrides["mla_decode"]))
+    if "moe_dispatch" in overrides and cfg.moe:
+        cfg = dc.replace(cfg, moe=dc.replace(
+            cfg.moe, dispatch=overrides["moe_dispatch"]))
+    return cfg
+
+
+def run_combo(arch: str, shape_name: str, multi_pod: bool,
+              with_units: bool = True, overrides: dict | None = None) -> dict:
+    overrides = overrides or {}
+    shape = INPUT_SHAPES[shape_name]
+    base_cfg = get_config(arch)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "status": "unsupported", "overrides": overrides}
+    if not base_cfg.supports_shape(shape_name):
+        rec["reason"] = ("full-attention KV at 524288 infeasible; "
+                         "see DESIGN.md shape-skip table")
+        return rec
+
+    cfg = apply_overrides(_dryrun_cfg(base_cfg, shape), overrides)
+    use_tri = bool(int(overrides.get("use_tri", 0)))
+    microbatches = (int(overrides["microbatches"])
+                    if "microbatches" in overrides else None)
+    model = make_model(cfg, use_tri=use_tri)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(mesh.devices.shape))
+
+    if shape.mode == "train":
+        step, specs, donate, M = build_train_step(model, shape, mesh,
+                                                  microbatches=microbatches)
+    elif shape.mode == "prefill":
+        step, specs, donate, M = build_prefill_step(model, shape, mesh)
+    else:
+        step, specs, donate, M = build_decode_step(model, shape, mesh)
+
+    t0 = time.monotonic()
+    with mesh:
+        lowered = jax.jit(step, donate_argnums=donate).lower(*specs)
+        t_lower = time.monotonic() - t0
+        compiled = lowered.compile()
+        t_compile = time.monotonic() - t0 - t_lower
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    colls_full = parse_collectives(hlo)
+    print(compiled.memory_analysis())
+    print({k: v for k, v in ca.items()
+           if k in ("flops", "bytes accessed")})
+
+    rec.update({
+        "status": "ok",
+        "lower_seconds": round(t_lower, 2),
+        "compile_seconds": round(t_compile, 2),
+        "microbatches": M,
+        "memory": {
+            "argument_bytes_per_device": ma.argument_size_in_bytes,
+            "output_bytes_per_device": ma.output_size_in_bytes,
+            "temp_bytes_per_device": ma.temp_size_in_bytes,
+            "alias_bytes_per_device": ma.alias_size_in_bytes,
+            "cpu_bf16_upcast_artifact_bytes": convert_artifact_bytes(hlo),
+            "peak_estimate_per_device": (
+                ma.argument_size_in_bytes + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes - ma.alias_size_in_bytes),
+            "tpu_adjusted_peak_per_device": (
+                ma.argument_size_in_bytes + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes - ma.alias_size_in_bytes
+                - convert_artifact_bytes(hlo)),
+        },
+        "cost_raw": {"flops_per_device": ca.get("flops", 0.0),
+                     "bytes_accessed_per_device": ca.get("bytes accessed", 0.0),
+                     "note": "while bodies counted once; see units ledger"},
+        "collectives_full_program_once_counted": colls_full,
+    })
+
+    # ---------------- units ledger ----------------
+    if with_units:
+        unit_rows = []
+        flops_total = 0.0
+        coll_bytes_per_dev = 0.0
+        coll_by_op = Counter()
+        raw = {}
+        units = build_units(model, shape, mesh, microbatches=microbatches)
+        with mesh:
+            for u in units:
+                lw = jax.jit(u.fn).lower(*u.specs)
+                cp = lw.compile()
+                uca = cp.cost_analysis() or {}
+                ucol = parse_collectives(cp.as_text())
+                cmul = (u.coll_multiplier if u.coll_multiplier is not None
+                        else u.multiplier)
+                raw[u.name] = (u, uca.get("flops", 0.0), ucol, cmul)
+        for name, (u, fl, ucol, cmul) in raw.items():
+            flops_total += fl * n_chips * u.multiplier
+            coll_bytes_per_dev += ucol["total_bytes"] * cmul
+            for k, v in ucol["bytes"].items():
+                coll_by_op[k] += v * cmul
+            unit_rows.append({
+                "unit": u.name, "multiplier": u.multiplier,
+                "coll_multiplier": cmul,
+                "flops_per_device_once": fl,
+                "collective_bytes_once": ucol["total_bytes"],
+                "collective_ops": ucol["count"]})
+        # weight-grad reductions: (full vjp - activation-only) collectives,
+        # once per step (XLA defers the data-axis reduction out of the
+        # microbatch loop)
+        for name, (u, fl, ucol, cmul) in raw.items():
+            act_name = name + "__act"
+            if act_name in raw:
+                act_bytes = raw[act_name][2]["total_bytes"]
+                n_layers_mult = raw[act_name][3] / max(
+                    1.0, TRAIN_MICROBATCHES.get(cfg.name, 1)
+                    if microbatches is None else microbatches)
+                wgrad = max(0.0, ucol["total_bytes"] - act_bytes)
+                coll_bytes_per_dev += wgrad * n_layers_mult
+                coll_by_op["wgrad_once"] += wgrad * n_layers_mult
+                unit_rows.append({
+                    "unit": name + "__wgrad", "multiplier": n_layers_mult,
+                    "coll_multiplier": n_layers_mult,
+                    "flops_per_device_once": 0.0,
+                    "collective_bytes_once": wgrad,
+                    "collective_ops": {}})
+        rec["units"] = unit_rows
+        rec["ledger"] = {
+            "hlo_flops_global": flops_total,
+            "collective_bytes_per_device": coll_bytes_per_dev,
+            "collective_bytes_by_op_per_device": dict(coll_by_op),
+        }
+
+        # ---------------- roofline ----------------
+        mf = model_flops(cfg, shape)
+        hbm_per_dev = analytic_hbm_traffic(cfg, shape, n_chips)
+        compute_term = flops_total / (n_chips * PEAK_FLOPS_BF16)
+        memory_term = hbm_per_dev / HBM_BW
+        collective_term = coll_bytes_per_dev / ICI_BW
+        terms = {"compute": compute_term, "memory": memory_term,
+                 "collective": collective_term}
+        rec["roofline"] = {
+            **{f"{k}_seconds": v for k, v in terms.items()},
+            "dominant": max(terms, key=terms.get),
+            "model_flops": mf,
+            "useful_flop_ratio": mf / flops_total if flops_total else 0.0,
+            "hbm_bytes_per_device": hbm_per_dev,
+        }
+    return rec
+
+
+# ----------------------------------------------------------------------
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--no-units", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--override", default="",
+                    help="comma list k=v (strategy, mla_decode, "
+                         "moe_dispatch, use_tri, microbatches)")
+    ap.add_argument("--tag", default="", help="suffix for output filenames")
+    args = ap.parse_args()
+    overrides = dict(kv.split("=", 1) for kv in args.override.split(",")
+                     if "=" in kv)
+
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch in archs:
+        for shape_name in shapes:
+            for multi_pod in meshes:
+                tag = f"{arch}__{shape_name}__{'mp' if multi_pod else 'sp'}"
+                if args.tag:
+                    tag += "__" + args.tag
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path) and not args.force:
+                    print(f"[skip] {tag} (cached)")
+                    continue
+                print(f"[run ] {tag}")
+                t0 = time.monotonic()
+                try:
+                    rec = run_combo(arch, shape_name, multi_pod,
+                                    with_units=not args.no_units,
+                                    overrides=overrides)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape_name,
+                           "mesh": "2x16x16" if multi_pod else "16x16",
+                           "status": "FAILED", "error": str(e),
+                           "traceback": traceback.format_exc()[-2000:]}
+                    failures.append(tag)
+                rec["wall_seconds"] = round(time.monotonic() - t0, 1)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1, default=float)
+                print(f"       -> {rec['status']} "
+                      f"({rec['wall_seconds']}s)")
+    if failures:
+        print("FAILURES:", failures)
+        raise SystemExit(1)
+    print("all combos ok")
+
+
+if __name__ == "__main__":
+    main()

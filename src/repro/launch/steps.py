@@ -1,0 +1,445 @@
+"""Step builders for the multi-pod dry-run + the scan-free roofline "units".
+
+The FULL programs (train_step / prefill / decode_step) are the deployable
+artifacts: scanned over layers (depth-independent HLO), chunked attention,
+microbatched — these must ``.lower().compile()`` on the production meshes and
+provide ``memory_analysis()``.
+
+XLA's HloCostAnalysis counts a while-loop body ONCE regardless of trip count
+(verified empirically — see EXPERIMENTS.md §Dry-run), so FLOP/collective
+ledgers from the full program alone would undercount by the scan trip counts.
+Each combo therefore also lowers scan-free UNITS (one per distinct block
+kind + embedding/loss + optimizer update) with exact multipliers
+(layer counts × microbatches × timesteps), from which the roofline terms are
+assembled.  Unit attention is unchunked (identical FLOPs to the masked
+blockwise baseline; no allocation ever happens — analysis only).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ATTENTION_KINDS, InputShape, ModelConfig
+from repro.models import transformer
+from repro.models.model import Model
+from repro.sharding import (batch_axes, cache_leaf_spec, logits_constrainer,
+                            shard_cache_for_model, shard_params, token_spec,
+                            with_sharding)
+from repro.train import OptimizerConfig, init_opt_state, make_train_step
+
+SDS = jax.ShapeDtypeStruct
+
+# microbatch counts for train_4k, sized so remat boundaries fit HBM
+TRAIN_MICROBATCHES = {
+    "pixtral-12b": 8, "musicgen-medium": 4, "gemma2-27b": 8,
+    "deepseek-v2-lite-16b": 4, "phi3-medium-14b": 8, "nemotron-4-15b": 8,
+    "granite-moe-1b-a400m": 2, "qwen2-0.5b": 2, "recurrentgemma-2b": 4,
+    "xlstm-350m": 2,
+}
+
+
+@dataclass
+class Unit:
+    name: str
+    fn: Callable
+    specs: tuple
+    multiplier: float            # FLOP multiplier (trip count)
+    coll_multiplier: Optional[float] = None   # collective multiplier
+    # train-block pairing: "<name>__act" units count per-microbatch
+    # collectives; the full-vjp unit minus the act unit gives the weight-grad
+    # reduction, counted once per step (XLA defers data-axis grad reductions
+    # out of the microbatch loop).
+
+
+def resolve_serve_strategy(cfg: ModelConfig) -> str:
+    """"auto": dp_cp (replicated weights, batch x sequence parallelism) for
+    pure-attention archs whose replicated weights fit comfortably per chip;
+    tensor-parallel otherwise."""
+    if cfg.serve_strategy != "auto":
+        return cfg.serve_strategy
+    pure_attn = all(k in ATTENTION_KINDS for k in cfg.layer_kinds)
+    small = cfg.param_count() * 2 <= 2.5e9
+    return "dp_cp" if (pure_attn and small and cfg.moe is None) else "tp"
+
+
+def _unit_cfg(cfg: ModelConfig, S: int) -> ModelConfig:
+    kw = dict(q_chunk=max(S, 1), kv_chunk=max(S, 1), remat=False)
+    if cfg.xlstm:
+        kw["xlstm"] = dataclasses.replace(cfg.xlstm, chunk_size=max(S, 16))
+    return dataclasses.replace(cfg, **kw)
+
+
+def _dryrun_cfg(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Full-program config tweaks for lowering feasibility at scale."""
+    kw: dict = {}
+    if cfg.xlstm and shape.seq_len >= 32768:
+        # keep the unrolled chunk count bounded for HLO size
+        kw["xlstm"] = dataclasses.replace(cfg.xlstm, chunk_size=2048)
+    elif cfg.xlstm and shape.mode == "train":
+        kw["xlstm"] = dataclasses.replace(cfg.xlstm, chunk_size=256)
+    if shape.seq_len >= 32768:
+        kw["q_chunk"], kw["kv_chunk"] = 1024, 2048
+    return dataclasses.replace(cfg, **kw) if kw else cfg
+
+
+def _batch_sds(model: Model, shape, mesh, strategy: str = "tp"):
+    """Token batch specs with shardings attached."""
+    cfg = model.cfg
+    B, S = shape.global_batch, shape.seq_len
+    tok = token_spec(mesh, B)
+    if strategy == "dp_cp" and S > 1:
+        import numpy as _np
+        model_size = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+        if S % model_size == 0:
+            tok = P(tok[0] if len(tok) else None, "model")
+    out = {"tokens": SDS((B, S), jnp.int32,
+                         sharding=NamedSharding(mesh, tok))}
+    if shape.mode == "train":
+        out["targets"] = SDS((B, S), jnp.int32,
+                             sharding=NamedSharding(mesh, tok))
+    if cfg.frontend != "none":
+        emb = P(*(tuple(tok) + (None, None)))[:3]
+        out["frontend_embeds"] = SDS(
+            (B, S, cfg.d_model), jnp.dtype(cfg.dtype),
+            sharding=NamedSharding(mesh, P(tok[0], None, None)))
+        out["frontend_mask"] = SDS(
+            (B, S), jnp.bool_, sharding=NamedSharding(mesh, tok))
+    return out
+
+
+def _params_sds(model: Model, mesh, mode: str):
+    shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    shardings = shard_params(shapes, mesh, mode)
+    return with_sharding(shapes, shardings)
+
+
+# ======================================================================
+# FULL PROGRAMS
+def build_train_step(model: Model, shape: InputShape, mesh,
+                     microbatches: Optional[int] = None):
+    cfg = model.cfg
+    model.constrain = logits_constrainer(mesh)
+    M = microbatches or TRAIN_MICROBATCHES.get(cfg.name, 1)
+    opt_cfg = OptimizerConfig()
+    step = make_train_step(model, opt_cfg, num_microbatches=M,
+                           constrain=model.constrain,
+                           seq_chunk=min(512, shape.seq_len))
+    params = _params_sds(model, mesh, "train")
+    mu = jax.tree.map(lambda s: SDS(s.shape, jnp.float32,
+                                    sharding=s.sharding), params)
+    from repro.train.optimizer import OptState
+    opt_state = OptState(
+        step=SDS((), jnp.int32, sharding=NamedSharding(mesh, P())),
+        mu=mu, nu=mu)
+    batch = _batch_sds(model, shape, mesh)
+    return step, (params, opt_state, batch), (0, 1), M
+
+
+def build_prefill_step(model: Model, shape: InputShape, mesh):
+    cfg = model.cfg
+    strategy = resolve_serve_strategy(cfg)
+    model.constrain = logits_constrainer(mesh, strategy)
+    B, S = shape.global_batch, shape.seq_len
+
+    def step(params, batch):
+        return model.prefill(
+            params, batch["tokens"],
+            frontend_embeds=batch.get("frontend_embeds"),
+            frontend_mask=batch.get("frontend_mask"))
+
+    params = _params_sds(model, mesh,
+                         "serve_dp" if strategy == "dp_cp" else "serve")
+    batch = _batch_sds(model, shape, mesh, strategy=strategy)
+    return step, (params, batch), (), 1
+
+
+def build_decode_step(model: Model, shape: InputShape, mesh):
+    cfg = model.cfg
+    strategy = resolve_serve_strategy(cfg)
+    model.constrain = logits_constrainer(mesh, strategy)
+    B, S = shape.global_batch, shape.seq_len
+
+    def step(params, cache, token, pos):
+        return model.decode_step(params, cache, token, pos)
+
+    params = _params_sds(model, mesh,
+                         "serve_dp" if strategy == "dp_cp" else "serve")
+    cache_shapes = jax.eval_shape(lambda: model.init_cache(B, S))
+    cache_sh = shard_cache_for_model(cfg, cache_shapes, mesh, B, strategy)
+    cache = jax.tree.map(
+        lambda s, sh: SDS(s.shape, s.dtype, sharding=sh),
+        cache_shapes, cache_sh)
+    tok = token_spec(mesh, B)
+    token = SDS((B, 1), jnp.int32, sharding=NamedSharding(mesh, tok))
+    pos = SDS((B,), jnp.int32,
+              sharding=NamedSharding(mesh, P(tok[0])))
+    return step, (params, cache, token, pos), (1,), 1
+
+
+# ======================================================================
+# UNITS
+def _block_param_sds(kind, cfg, mesh, mode):
+    shapes = jax.eval_shape(
+        lambda: transformer.init_block(jax.random.PRNGKey(0), kind, cfg))
+    return with_sharding(shapes, shard_params(shapes, mesh, mode))
+
+
+def _x_sds(B, S, cfg, mesh, strategy: str = "tp"):
+    tok = token_spec(mesh, B)
+    seq_ax = None
+    if strategy == "dp_cp" and S > 1:
+        model_size = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+        if S % model_size == 0:
+            seq_ax = "model"
+    return SDS((B, S, cfg.d_model), jnp.dtype(cfg.dtype),
+               sharding=NamedSharding(mesh, P(tok[0], seq_ax, None)))
+
+
+def _kind_counts(cfg) -> Dict[str, int]:
+    counts: Dict[str, int] = {}
+    for k in cfg.layer_kinds:
+        counts[k] = counts.get(k, 0) + 1
+    return counts
+
+
+def build_units(model: Model, shape: InputShape, mesh,
+                microbatches: Optional[int] = None) -> List[Unit]:
+    cfg = model.cfg
+    B, S = shape.global_batch, shape.seq_len
+    units: List[Unit] = []
+    counts = _kind_counts(cfg)
+    strategy = resolve_serve_strategy(cfg) if shape.mode != "train" else "tp"
+    mode = "train" if shape.mode == "train" else (
+        "serve_dp" if strategy == "dp_cp" else "serve")
+
+    if shape.mode == "train":
+        M = microbatches or TRAIN_MICROBATCHES.get(cfg.name, 1)
+        B_mb = B // M
+        ucfg = _unit_cfg(cfg, S)
+
+        use_tri = getattr(model, "use_tri", False)
+        if use_tri:
+            # tri: python-unrolled q chunks, each a single-KV-block flash
+            # call => scan-free and exactly counted by cost analysis
+            ucfg = dataclasses.replace(ucfg, q_chunk=min(2048, S),
+                                       kv_chunk=S)
+        for kind, n in counts.items():
+            if kind == "slstm":
+                units.extend(_slstm_train_units(ucfg, mesh, B_mb, S, n * M))
+                continue
+
+            def fwd_fn(p, x, kind=kind, ucfg=ucfg):
+                return jax.checkpoint(
+                    lambda p, x: transformer.block_apply(
+                        kind, ucfg, p, x, use_tri=use_tri)[0])(p, x)
+
+            def block_grads(p, x, fwd_fn=fwd_fn):
+                # vjp with a bf16 cotangent: the residual-stream cotangent in
+                # the real program has the primal dtype (bf16), so unit
+                # collectives must not be f32-inflated
+                out, vjp = jax.vjp(fwd_fn, p, x)
+                return vjp(jnp.ones_like(out))
+
+            def block_dx_only(p, x, fwd_fn=fwd_fn):
+                out, vjp = jax.vjp(lambda x: fwd_fn(p, x), x)
+                return vjp(jnp.ones_like(out))[0]
+
+            p_sds = _block_param_sds(kind, ucfg, mesh, mode)
+            x_sds = _x_sds(B_mb, S, ucfg, mesh)
+            units.append(Unit(f"block_{kind}", block_grads,
+                              (p_sds, x_sds), n * M, coll_multiplier=0.0))
+            units.append(Unit(f"block_{kind}__act", block_dx_only,
+                              (p_sds, x_sds), 0.0, coll_multiplier=n * M))
+
+        # embedding + head + loss (vjp), seq-chunk disabled (scan-free)
+        def lm_loss(p, x, targets):
+            logits = model._logits(p, x,
+                                   constrain=logits_constrainer(mesh))
+            logits = logits.astype(jnp.float32)
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, targets[..., None],
+                                       axis=-1)[..., 0]
+            return jnp.sum(logz - gold) / targets.size
+
+        def embed_fwd(p, tokens):
+            return jnp.sum(model._embed(p, tokens).astype(jnp.float32))
+
+        head_shapes = jax.eval_shape(lambda: {
+            k: v for k, v in model.init(jax.random.PRNGKey(0)).items()
+            if k in ("embed", "unembed", "final_norm")})
+        head_sds = with_sharding(head_shapes,
+                                 shard_params(head_shapes, mesh, mode))
+        tok = token_spec(mesh, B_mb)
+        Sc = min(512, S)               # loss works on seq chunks of <=512
+        tok_sds = SDS((B_mb, Sc), jnp.int32,
+                      sharding=NamedSharding(mesh, tok))
+        units.append(Unit(
+            "lm_head_loss", jax.grad(lm_loss, argnums=(0, 1)),
+            (head_sds, _x_sds(B_mb, Sc, cfg, mesh), tok_sds),
+            M * (S // Sc), coll_multiplier=0.0))
+        units.append(Unit(
+            "lm_head_loss__act", jax.grad(lm_loss, argnums=(1,)),
+            (head_sds, _x_sds(B_mb, Sc, cfg, mesh), tok_sds),
+            0.0, coll_multiplier=M * (S // Sc)))
+        # embed-table grad reduction happens once per step (deferred out of
+        # the microbatch loop): flops x M, collectives x 1
+        units.append(Unit(
+            "embed", jax.grad(embed_fwd),
+            (head_sds, SDS((B_mb, S), jnp.int32,
+                           sharding=NamedSharding(mesh, tok))), M,
+            coll_multiplier=1.0))
+
+        # optimizer update (once per step)
+        from repro.train.optimizer import OptState, adamw_update
+        params_sds = _params_sds(model, mesh, "train")
+        mu = jax.tree.map(lambda s: SDS(s.shape, jnp.float32,
+                                        sharding=s.sharding), params_sds)
+        opt_sds = OptState(step=SDS((), jnp.int32,
+                                    sharding=NamedSharding(mesh, P())),
+                           mu=mu, nu=mu)
+        grads_sds = params_sds
+
+        def opt_fn(params, grads, opt_state):
+            return adamw_update(OptimizerConfig(), params, grads, opt_state)
+
+        units.append(Unit("opt_update", opt_fn,
+                          (params_sds, grads_sds, opt_sds), 1))
+        return units
+
+    if shape.mode == "prefill":
+        ucfg = _unit_cfg(cfg, S)
+        use_tri = getattr(model, "use_tri", False)
+        if use_tri:
+            ucfg = dataclasses.replace(ucfg, q_chunk=min(2048, S),
+                                       kv_chunk=S)
+        for kind, n in counts.items():
+            if kind == "slstm":
+                units.extend(_slstm_fwd_units(ucfg, mesh, B, S, n))
+                continue
+
+            def block_fwd(p, x, kind=kind, ucfg=ucfg, use_tri=use_tri):
+                return transformer.block_apply(kind, ucfg, p, x,
+                                               use_tri=use_tri)[0]
+
+            p_sds = _block_param_sds(kind, ucfg, mesh, mode)
+            units.append(Unit(f"block_{kind}", block_fwd,
+                              (p_sds, _x_sds(B, S, ucfg, mesh, strategy)), n))
+        units.append(_embed_head_unit(model, mesh, B, S, head_len=1,
+                                      mode=mode))
+        return units
+
+    # decode
+    for kind, n in counts.items():
+        def block_dec(p, cache, x, pos, kind=kind):
+            out, nc, _ = transformer.block_apply(
+                kind, cfg, p, x, cache=cache, pos=pos, decode=True)
+            return out, nc
+
+        p_sds = _block_param_sds(kind, cfg, mesh, mode)
+        cache_shapes = jax.eval_shape(
+            lambda: transformer.init_block_cache(kind, cfg, B, S))
+        cache_sds = {
+            k: SDS(v.shape, v.dtype,
+                   sharding=NamedSharding(mesh, cache_leaf_spec(
+                       kind, k, v.shape, mesh, B, strategy)))
+            for k, v in cache_shapes.items()}
+        tok = token_spec(mesh, B)
+        pos_sds = SDS((B,), jnp.int32, sharding=NamedSharding(mesh, P(tok[0])))
+        units.append(Unit(f"block_{kind}", block_dec,
+                          (p_sds, cache_sds, _x_sds(B, 1, cfg, mesh),
+                           pos_sds), n))
+    units.append(_embed_head_unit(model, mesh, B, 1, head_len=1, mode=mode))
+    return units
+
+
+def _embed_head_unit(model: Model, mesh, B, S, head_len=1,
+                     mode: str = "serve") -> Unit:
+    def fn(p, tokens, x_last):
+        x = model._embed(p, tokens)
+        return jnp.sum(x.astype(jnp.float32)), model._logits(p, x_last)
+
+    head_shapes = jax.eval_shape(lambda: {
+        k: v for k, v in model.init(jax.random.PRNGKey(0)).items()
+        if k in ("embed", "unembed", "final_norm")})
+    head_sds = with_sharding(head_shapes,
+                             shard_params(head_shapes, mesh, mode))
+    tok = token_spec(mesh, B)
+    return Unit("embed_head", fn,
+                (head_sds,
+                 SDS((B, S), jnp.int32, sharding=NamedSharding(mesh, tok)),
+                 _x_sds(B, head_len, model.cfg, mesh)), 1)
+
+
+# ----------------------------------------------------------------------
+# sLSTM: the time recurrence is a sequential scan; account one projected
+# step x S plus the (scan-free) input projections.
+def _slstm_parts(cfg, mesh, B, S):
+    from repro.models import xlstm as xl
+    p_shapes = jax.eval_shape(
+        lambda: xl.init_slstm_block(jax.random.PRNGKey(0), cfg))
+    p_sds = with_sharding(p_shapes, shard_params(p_shapes, mesh, "serve"))
+    state_shapes = jax.eval_shape(lambda: xl.init_slstm_cache(cfg, B))
+    st_sds = {k: SDS(v.shape, v.dtype,
+                     sharding=NamedSharding(mesh, cache_leaf_spec(
+                         "slstm", k, v.shape, mesh, B)))
+              for k, v in state_shapes.items()}
+    tok = token_spec(mesh, B)
+    xin = SDS((B, cfg.d_model), jnp.float32,
+              sharding=NamedSharding(mesh, P(tok[0], None)))
+    return p_sds, st_sds, xin
+
+
+def _slstm_fwd_units(cfg, mesh, B, S, n) -> List[Unit]:
+    from repro.models import xlstm as xl
+    p_sds, st_sds, xin = _slstm_parts(cfg, mesh, B, S)
+
+    def proj(p, x):
+        xf = x.astype(jnp.float32)
+        outs = [xf @ p[f"w_{g}"].astype(jnp.float32) + p[f"b_{g}"]
+                for g in "zifo"]
+        h = sum(outs)[..., :cfg.d_model].astype(x.dtype)
+        return (jax.nn.gelu(h @ p["w_up1"]) * (h @ p["w_up2"])) @ p["w_down"]
+
+    def step(p, state, xz, xi, xf, xo):
+        return xl.slstm_step(p, xz, xi, xf, xo, state, cfg.n_heads)
+
+    tok = token_spec(mesh, B)
+    xseq = SDS((B, S, cfg.d_model), jnp.dtype(cfg.dtype),
+               sharding=NamedSharding(mesh, P(tok[0], None, None)))
+    return [
+        Unit("slstm_proj", proj, (p_sds, xseq), n),
+        Unit("slstm_step", step, (p_sds, st_sds, xin, xin, xin, xin), n * S),
+    ]
+
+
+def _slstm_train_units(cfg, mesh, B, S, mult) -> List[Unit]:
+    from repro.models import xlstm as xl
+    p_sds, st_sds, xin = _slstm_parts(cfg, mesh, B, S)
+
+    def proj_loss(p, x):
+        xf = x.astype(jnp.float32)
+        outs = [xf @ p[f"w_{g}"].astype(jnp.float32) + p[f"b_{g}"]
+                for g in "zifo"]
+        h = sum(outs)[..., :cfg.d_model].astype(x.dtype)
+        out = (jax.nn.gelu(h @ p["w_up1"]) * (h @ p["w_up2"])) @ p["w_down"]
+        return jnp.sum(out.astype(jnp.float32))
+
+    def step_loss(p, state, xz, xi, xf, xo):
+        st = xl.slstm_step(p, xz, xi, xf, xo, state, cfg.n_heads)
+        return jnp.sum(st["h"])
+
+    tok = token_spec(mesh, B)
+    xseq = SDS((B, S, cfg.d_model), jnp.dtype(cfg.dtype),
+               sharding=NamedSharding(mesh, P(tok[0], None, None)))
+    return [
+        Unit("slstm_proj", jax.grad(proj_loss, argnums=(0, 1)),
+             (p_sds, xseq), mult),
+        Unit("slstm_step", jax.grad(step_loss, argnums=(0, 1, 2, 3, 4, 5)),
+             (p_sds, st_sds, xin, xin, xin, xin), mult * S),
+    ]

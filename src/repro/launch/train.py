@@ -1,0 +1,66 @@
+"""Training launcher.
+
+Local execution (this container, 1 CPU device): reduced configs train for
+real.  Production meshes cannot execute here — use ``--dry-run`` to AOT
+lower+compile the full config on the 16x16 / 2x16x16 mesh instead (see
+repro.launch.dryrun).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --steps 50
+  PYTHONPATH=src python -m repro.launch.train --arch gemma2-27b --dry-run
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--checkpoint", default="")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="lower+compile train_4k on the production mesh")
+    args = ap.parse_args()
+
+    if args.dry_run:
+        from repro.launch import dryrun
+        sys.argv = ["dryrun", "--arch", args.arch, "--shape", "train_4k",
+                    "--mesh", "both", "--force"]
+        return dryrun.main()
+
+    from repro.configs import get_config
+    from repro.data import DataConfig, packed_batches
+    from repro.models import make_model
+    from repro.train import OptimizerConfig, Trainer, TrainerConfig
+
+    cfg = get_config(args.arch).reduced()
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    model = make_model(cfg)
+    print(f"training {cfg.name}: {cfg.param_count()/1e6:.1f}M params "
+          f"(reduced variant; full config via --dry-run)")
+    data = packed_batches(DataConfig(vocab_size=cfg.vocab_size,
+                                     seq_len=args.seq,
+                                     batch_size=args.batch, seed=0))
+    trainer = Trainer(
+        model,
+        OptimizerConfig(peak_lr=args.lr, warmup_steps=args.steps // 10,
+                        total_steps=args.steps),
+        TrainerConfig(steps=args.steps, num_microbatches=args.microbatches,
+                      checkpoint_every=(args.steps if args.checkpoint else 0),
+                      checkpoint_path=args.checkpoint),
+        data)
+    hist = trainer.run()
+    for h in hist[:: max(1, args.steps // 10)]:
+        print(f"step {h['step']:4d} loss {h['loss']:.4f} "
+              f"gnorm {h['grad_norm']:.2f} {h['seconds']*1e3:.0f}ms")
+    print(f"done: loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,153 @@
+"""Griffin / RecurrentGemma recurrent block: gated branch ⊙ (linear → causal
+conv1d → RG-LRU), then output projection.
+
+RG-LRU recurrence (Griffin eq. 1-4), computed in f32:
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate, block-diagonal)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate, block-diagonal)
+    log a_t = -c * softplus(Lambda) * r_t
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training uses ``jax.lax.associative_scan`` (parallel over sequence);
+decoding is a single-step update.  The Pallas kernel in
+``repro.kernels.rglru_scan`` implements the sequential scan for TPU; this
+module is its oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def _blockdiag_init(key, nh, rh, dtype):
+    ks = jax.random.split(key, nh)
+    return jnp.stack([dense_init(ks[i], rh, rh, dtype) for i in range(nh)])
+
+
+def init_rglru_block(key, cfg):
+    g = cfg.rglru
+    d = cfg.d_model
+    r = g.d_rnn or d
+    nh = cfg.n_heads
+    assert r % nh == 0
+    rh = r // nh
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    # Lambda init so that a^c in [0.9, 0.999] as in Griffin
+    u = jax.random.uniform(ks[0], (r,), jnp.float32, 0.9 ** 2, 0.999 ** 2)
+    lam = jnp.log(jnp.exp(-jnp.log(u) / (2 * g.c)) - 1.0)  # softplus^-1
+    return {
+        "w_gate": dense_init(ks[1], d, r, dtype),
+        "w_rec": dense_init(ks[2], d, r, dtype),
+        "conv_w": (jax.random.normal(ks[3], (g.conv_width, r), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((r,), dtype),
+        "lru": {
+            "lambda": lam,                                  # (r,) f32
+            "w_a": _blockdiag_init(ks[4], nh, rh, jnp.float32),
+            "b_a": jnp.zeros((r,), jnp.float32),
+            "w_x": _blockdiag_init(ks[5], nh, rh, jnp.float32),
+            "b_x": jnp.zeros((r,), jnp.float32),
+        },
+        "w_out": dense_init(ks[6], r, d, dtype),
+    }
+
+
+def _block_linear(w, x, nh):
+    """x: (..., r) with block-diagonal weight w: (nh, rh, rh)."""
+    shp = x.shape
+    xh = x.reshape(*shp[:-1], nh, shp[-1] // nh)
+    yh = jnp.einsum("...hr,hrq->...hq", xh, w)
+    return yh.reshape(shp)
+
+
+def _gates(lru, x, nh, c):
+    xf = x.astype(jnp.float32)
+    r_gate = jax.nn.sigmoid(_block_linear(lru["w_a"], xf, nh) + lru["b_a"])
+    i_gate = jax.nn.sigmoid(_block_linear(lru["w_x"], xf, nh) + lru["b_x"])
+    log_a = -c * jax.nn.softplus(lru["lambda"]) * r_gate
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * (i_gate * xf)
+
+
+def rglru_scan(lru, x, nh, c, h0=None):
+    """x: (B, S, r) -> (y (B,S,r), h_final (B,r)); parallel associative scan."""
+    a, b = _gates(lru, x, nh, c)                            # (B,S,r) f32
+    if h0 is not None:
+        # fold the incoming state into the first step: h_1 = a_1 h_0 + b_1
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(left, right):
+        al, bl = left
+        ar, br = right
+        return al * ar, bl * ar + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_step(lru, x_t, h, nh, c):
+    """x_t: (B, r); h: (B, r) f32 -> (y_t, h_new)."""
+    a, b = _gates(lru, x_t, nh, c)
+    h_new = a * h.astype(jnp.float32) + b
+    return h_new.astype(x_t.dtype), h_new
+
+
+def conv1d_causal(w, bias, x):
+    """Depthwise causal conv. x: (B,S,r); w: (width,r)."""
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    S = x.shape[1]
+    for i in range(width):
+        y = y + pad[:, i:i + S].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return (y + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def conv1d_step(w, bias, x_t, conv_cache):
+    """x_t: (B,r); conv_cache: (B,width-1,r) past inputs (oldest first)."""
+    width = w.shape[0]
+    hist = jnp.concatenate([conv_cache, x_t[:, None]], axis=1)  # (B,width,r)
+    y = jnp.einsum("bwr,wr->br", hist.astype(jnp.float32),
+                   w.astype(jnp.float32)) + bias.astype(jnp.float32)
+    return y.astype(x_t.dtype), hist[:, 1:]
+
+
+def rglru_block_apply(p, x, cfg, cache=None, pos=None):
+    """Full Griffin recurrent block.
+
+    Train/prefill: x (B,S,d), cache None -> (y, {"h","conv"} final states).
+    Decode: x (B,1,d), cache {"h": (B,r) f32, "conv": (B,w-1,r)}.
+    """
+    g = cfg.rglru
+    nh = cfg.n_heads
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    rec_in = x @ p["w_rec"]
+    if cache is None:
+        rec = conv1d_causal(p["conv_w"], p["conv_b"], rec_in)
+        y, h_last = rglru_scan(p["lru"], rec, nh, g.c)
+        width = p["conv_w"].shape[0]
+        B, S, r = rec_in.shape
+        if S >= width - 1:
+            conv_state = rec_in[:, S - (width - 1):]
+        else:
+            conv_state = jnp.pad(rec_in, ((0, 0), (width - 1 - S, 0), (0, 0)))
+        new_cache = {"h": h_last, "conv": conv_state}
+    else:
+        rec_t, conv_state = conv1d_step(p["conv_w"], p["conv_b"],
+                                        rec_in[:, 0], cache["conv"])
+        y_t, h_new = rglru_step(p["lru"], rec_t, cache["h"], nh, g.c)
+        y = y_t[:, None]
+        new_cache = {"h": h_new, "conv": conv_state}
+    out = (gate * y) @ p["w_out"]
+    return out, new_cache
+
+
+def init_rglru_cache(cfg, batch):
+    g = cfg.rglru
+    r = g.d_rnn or cfg.d_model
+    return {"h": jnp.zeros((batch, r), jnp.float32),
+            "conv": jnp.zeros((batch, g.conv_width - 1, r),
+                              jnp.dtype(cfg.dtype))}

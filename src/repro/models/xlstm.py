@@ -1,0 +1,308 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel training, O(1)
+decode state) and sLSTM (scalar memory, sequential recurrence with
+block-diagonal recurrent weights).  [arXiv:2405.04517]
+
+Both use exponential input gating with the log-space max stabilizer ``m``.
+The training-time parallel mLSTM here (flash-style online max over KV chunks
+with additive log-gate matrix ``logD``) is the oracle for a TPU kernel and is
+validated against the exact step-by-step recurrence in tests.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import NEG_INF, dense_init, init_rmsnorm, rmsnorm_apply
+from repro.models.rglru import conv1d_causal, conv1d_step
+
+
+# ======================================================================
+# mLSTM
+def init_mlstm_block(key, cfg):
+    x = cfg.xlstm
+    d = cfg.d_model
+    di = int(d * x.proj_factor_mlstm)
+    nh = cfg.n_heads
+    assert di % nh == 0
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 9)
+    return {
+        "w_up": dense_init(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (x.conv_width, di), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "wq": dense_init(ks[2], di, di, dtype),
+        "wk": dense_init(ks[3], di, di, dtype),
+        "wv": dense_init(ks[4], di, di, dtype),
+        "w_i": dense_init(ks[5], di, nh, jnp.float32),
+        "b_i": jnp.zeros((nh,), jnp.float32),
+        "w_f": dense_init(ks[6], di, nh, jnp.float32),
+        "b_f": jnp.full((nh,), 3.0, jnp.float32),   # forget-gate bias init
+        "out_norm": init_rmsnorm(di),
+        "w_down": dense_init(ks[7], di, d, dtype),
+    }
+
+
+def mlstm_parallel(q, k, v, i_raw, f_raw, chunk=64):
+    """Stabilized parallel mLSTM.
+
+    q,k,v: (B, S, nh, hd); i_raw,f_raw: (B, S, nh) f32.
+    Returns h: (B, S, nh, hd) plus final recurrent state (C, n, m).
+    """
+    B, S, nh, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+    logf = jax.nn.log_sigmoid(f_raw)                        # (B,S,nh)
+    b = jnp.cumsum(logf, axis=1)                            # (B,S,nh) inclusive
+
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+    # layout (B, nh, S, hd)
+    qh = q.transpose(0, 2, 1, 3) * scale
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+    bh = b.transpose(0, 2, 1)                               # (B,nh,S)
+    ih = i_raw.transpose(0, 2, 1)
+
+    qh = qh.reshape(B, nh, nc, chunk, hd)
+    kh = kh.reshape(B, nh, nc, chunk, hd)
+    vh = vh.reshape(B, nh, nc, chunk, hd)
+    bh = bh.reshape(B, nh, nc, chunk)
+    ih = ih.reshape(B, nh, nc, chunk)
+
+    def q_step(_, qi):
+        q_blk, b_q = qh[:, :, qi], bh[:, :, qi]
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            k_blk, v_blk = kh[:, :, ki], vh[:, :, ki]
+            b_k, i_k = bh[:, :, ki], ih[:, :, ki]
+            # logD_tj = b_t - b_j + i_j   (valid for j <= t)
+            logD = b_q[..., :, None] - b_k[..., None, :] + i_k[..., None, :]
+            tpos = qi * chunk + jnp.arange(chunk)
+            jpos = ki * chunk + jnp.arange(chunk)
+            mask = tpos[:, None] >= jpos[None, :]
+            logD = jnp.where(mask, logD, NEG_INF)
+            m_new = jnp.maximum(m, logD.max(axis=-1))
+            dmat = jnp.exp(logD - m_new[..., None])
+            qk = jnp.einsum("bhqd,bhkd->bhqk", q_blk, k_blk,
+                            preferred_element_type=jnp.float32)
+            s = qk * dmat
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + s.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", s.astype(v_blk.dtype), v_blk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((B, nh, chunk), NEG_INF, jnp.float32),
+                jnp.zeros((B, nh, chunk), jnp.float32),
+                jnp.zeros((B, nh, chunk, hd), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(qi + 1))
+        denom = jnp.maximum(jnp.abs(l), jnp.exp(-m))
+        return None, (acc / denom[..., None]).astype(q.dtype)
+
+    outs = []
+    for qi in range(nc):                                    # python loop: nc static
+        _, o = q_step(None, qi)
+        outs.append(o)
+    h = jnp.stack(outs, axis=2)                             # (B,nh,nc,chunk,hd)
+    h = h.reshape(B, nh, S, hd).transpose(0, 2, 1, 3)
+
+    # final recurrent state (for prefill -> decode handoff)
+    b_T = bh[:, :, -1, -1]                                  # (B,nh)
+    logw = (b_T[..., None, None] - bh + ih).reshape(B, nh, S)   # b_T - b_j + i_j
+    m_T = logw.max(axis=-1)                                 # (B,nh)
+    w = jnp.exp(logw - m_T[..., None])                      # (B,nh,S)
+    kf = kh.reshape(B, nh, S, hd).astype(jnp.float32)
+    vf = vh.reshape(B, nh, S, hd).astype(jnp.float32)
+    C = jnp.einsum("bhs,bhsv,bhsk->bhvk", w, vf, kf)
+    n = jnp.einsum("bhs,bhsk->bhk", w, kf)
+    return h, (C, n, m_T)
+
+
+def mlstm_step(q, k, v, i_raw, f_raw, state):
+    """One decode step.  q,k,v: (B,nh,hd); gates: (B,nh); state: (C,n,m)."""
+    C, n, m = state
+    hd = q.shape[-1]
+    scale = 1.0 / math.sqrt(hd)
+    logf = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(logf + m, i_raw)
+    i_p = jnp.exp(i_raw - m_new)
+    f_p = jnp.exp(logf + m - m_new)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    C_new = f_p[..., None, None] * C + i_p[..., None, None] * \
+        jnp.einsum("bhv,bhk->bhvk", vf, kf)
+    n_new = f_p[..., None] * n + i_p[..., None] * kf
+    qf = q.astype(jnp.float32) * scale
+    num = jnp.einsum("bhvk,bhk->bhv", C_new, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, qf)),
+                      jnp.exp(-m_new))
+    h = num / den[..., None]
+    return h.astype(q.dtype), (C_new, n_new, m_new)
+
+
+def _mlstm_qkv(p, x, cfg, conv_cache=None):
+    """Shared projection path.  Returns (q,k,v,i_raw,f_raw,z, new_conv)."""
+    nh = cfg.n_heads
+    up = x @ p["w_up"]
+    di = up.shape[-1] // 2
+    x_m, z = up[..., :di], up[..., di:]
+    if conv_cache is None:
+        x_c = jax.nn.silu(conv1d_causal(p["conv_w"], p["conv_b"], x_m))
+        new_conv = None
+        width = p["conv_w"].shape[0]
+        B, S, _ = x_m.shape
+        if S >= width - 1:
+            new_conv = x_m[:, S - (width - 1):]
+        else:
+            new_conv = jnp.pad(x_m, ((0, 0), (width - 1 - S, 0), (0, 0)))
+    else:
+        y, new_conv = conv1d_step(p["conv_w"], p["conv_b"], x_m[:, 0],
+                                  conv_cache)
+        x_c = jax.nn.silu(y)[:, None]
+    q = x_c @ p["wq"]
+    k = x_c @ p["wk"]
+    v = x_m @ p["wv"]
+    i_raw = (x_c.astype(jnp.float32) @ p["w_i"]) + p["b_i"]
+    f_raw = (x_c.astype(jnp.float32) @ p["w_f"]) + p["b_f"]
+    B = x.shape[0]
+    S = x.shape[1]
+    hd = di // nh
+    shp = (B, S, nh, hd)
+    return (q.reshape(shp), k.reshape(shp), v.reshape(shp),
+            i_raw, f_raw, z, new_conv)
+
+
+def mlstm_block_apply(p, x, cfg, cache=None):
+    """Train/prefill: cache None.  Decode: cache {"C","n","m","conv"}."""
+    if cache is None:
+        q, k, v, i_raw, f_raw, z, conv = _mlstm_qkv(p, x, cfg)
+        h, (C, n, m) = mlstm_parallel(q, k, v, i_raw, f_raw,
+                                      chunk=cfg.xlstm.chunk_size)
+        new_cache = {"C": C, "n": n, "m": m, "conv": conv}
+    else:
+        q, k, v, i_raw, f_raw, z, conv = _mlstm_qkv(p, x, cfg,
+                                                    conv_cache=cache["conv"])
+        h1, (C, n, m) = mlstm_step(q[:, 0], k[:, 0], v[:, 0],
+                                   i_raw[:, 0], f_raw[:, 0],
+                                   (cache["C"], cache["n"], cache["m"]))
+        h = h1[:, None]
+        new_cache = {"C": C, "n": n, "m": m, "conv": conv}
+    B, S = x.shape[0], x.shape[1]
+    h = h.reshape(B, S, -1)
+    h = rmsnorm_apply(p["out_norm"], h, cfg.norm_eps)
+    out = (h * jax.nn.silu(z)) @ p["w_down"]
+    return out, new_cache
+
+
+def init_mlstm_cache(cfg, batch):
+    x = cfg.xlstm
+    di = int(cfg.d_model * x.proj_factor_mlstm)
+    nh = cfg.n_heads
+    hd = di // nh
+    return {"C": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, nh, hd), jnp.float32),
+            "m": jnp.full((batch, nh), NEG_INF, jnp.float32),
+            "conv": jnp.zeros((batch, x.conv_width - 1, di),
+                              jnp.dtype(cfg.dtype))}
+
+
+# ======================================================================
+# sLSTM
+def init_slstm_block(key, cfg):
+    x = cfg.xlstm
+    d = cfg.d_model
+    nh = cfg.n_heads
+    assert d % nh == 0
+    dh = d // nh
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 12)
+
+    def rec(k):     # block-diagonal recurrent weights, f32 for the scan
+        kk = jax.random.split(k, nh)
+        return jnp.stack([dense_init(kk[i], dh, dh, jnp.float32)
+                          for i in range(nh)])
+
+    f = int(d * x.proj_factor_slstm)
+    return {
+        "w_z": dense_init(ks[0], d, d, dtype), "r_z": rec(ks[1]),
+        "w_i": dense_init(ks[2], d, d, dtype), "r_i": rec(ks[3]),
+        "w_f": dense_init(ks[4], d, d, dtype), "r_f": rec(ks[5]),
+        "w_o": dense_init(ks[6], d, d, dtype), "r_o": rec(ks[7]),
+        "b_z": jnp.zeros((d,), jnp.float32),
+        "b_i": jnp.zeros((d,), jnp.float32),
+        "b_f": jnp.full((d,), 3.0, jnp.float32),
+        "b_o": jnp.zeros((d,), jnp.float32),
+        "out_norm": init_rmsnorm(d),
+        "w_up1": dense_init(ks[8], d, f, dtype),
+        "w_up2": dense_init(ks[9], d, f, dtype),
+        "w_down": dense_init(ks[10], f, d, dtype),
+    }
+
+
+def _block_rec(w, h, nh):
+    """h: (B, d) f32, w: (nh, dh, dh)."""
+    B, d = h.shape
+    hh = h.reshape(B, nh, d // nh)
+    return jnp.einsum("bhr,hrq->bhq", hh, w).reshape(B, d)
+
+
+def slstm_step(p, xz, xi, xf, xo, state, nh):
+    """Precomputed input contributions (B,d) f32 + state dict."""
+    c, n, h, m = state["c"], state["n"], state["h"], state["m"]
+    z_t = jnp.tanh(xz + _block_rec(p["r_z"], h, nh))
+    i_t = xi + _block_rec(p["r_i"], h, nh)
+    f_t = xf + _block_rec(p["r_f"], h, nh)
+    o_t = jax.nn.sigmoid(xo + _block_rec(p["r_o"], h, nh))
+    logf = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(logf + m, i_t)
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.exp(logf + m - m_new)
+    c_new = f_p * c + i_p * z_t
+    n_new = jnp.maximum(f_p * n + i_p, 1e-12)
+    h_new = o_t * c_new / n_new
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+def slstm_block_apply(p, x, cfg, cache=None):
+    """Train/prefill: scan over S.  Decode: one step from cache states."""
+    nh = cfg.n_heads
+    B, S, d = x.shape
+    xf32 = x.astype(jnp.float32)
+    xz = xf32 @ p["w_z"].astype(jnp.float32) + p["b_z"]
+    xi = xf32 @ p["w_i"].astype(jnp.float32) + p["b_i"]
+    xf_ = xf32 @ p["w_f"].astype(jnp.float32) + p["b_f"]
+    xo = xf32 @ p["w_o"].astype(jnp.float32) + p["b_o"]
+    if cache is None:
+        state = init_slstm_cache(cfg, B)
+
+        def step(st, inp):
+            st = slstm_step(p, *inp, st, nh)
+            return st, st["h"]
+
+        state, hs = jax.lax.scan(
+            step, state,
+            (xz.transpose(1, 0, 2), xi.transpose(1, 0, 2),
+             xf_.transpose(1, 0, 2), xo.transpose(1, 0, 2)))
+        h = hs.transpose(1, 0, 2).astype(x.dtype)           # (B,S,d)
+        new_cache = state
+    else:
+        state = slstm_step(p, xz[:, 0], xi[:, 0], xf_[:, 0], xo[:, 0],
+                           cache, nh)
+        h = state["h"][:, None].astype(x.dtype)
+        new_cache = state
+    h = rmsnorm_apply(p["out_norm"], h, cfg.norm_eps)
+    out = (jax.nn.gelu(h @ p["w_up1"]) * (h @ p["w_up2"])) @ p["w_down"]
+    return out, new_cache
+
+
+def init_slstm_cache(cfg, batch):
+    d = cfg.d_model
+    return {"c": jnp.zeros((batch, d), jnp.float32),
+            "n": jnp.full((batch, d), 1e-12, jnp.float32),
+            "h": jnp.zeros((batch, d), jnp.float32),
+            "m": jnp.zeros((batch, d), jnp.float32)}

@@ -1,0 +1,93 @@
+"""Request batching: collect single requests into fixed-size batches
+(padding the tail) so the compiled executable shape is reused — serverless
+"requests" become batched model invocations."""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from typing import Any, Callable, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    payload: Any
+    future: Future = field(default_factory=Future)
+    submitted_at: float = field(default_factory=time.monotonic)
+
+
+class Batcher:
+    """Groups requests into batches of ``batch_size``; flushes on fullness or
+    ``max_wait`` seconds.  ``handler(payloads: list) -> list`` runs on the
+    worker thread."""
+
+    def __init__(self, batch_size: int, handler: Callable[[List[Any]], List[Any]],
+                 max_wait: float = 0.01):
+        self.batch_size = batch_size
+        self.handler = handler
+        self.max_wait = max_wait
+        self._q: queue.Queue = queue.Queue()
+        self._stop = False
+        self.batches_processed = 0
+        self.requests_processed = 0
+        self.batch_fill: List[int] = []
+        self._th = threading.Thread(target=self._loop, daemon=True)
+        self._th.start()
+
+    def submit(self, payload: Any) -> Future:
+        req = Request(payload)
+        self._q.put(req)
+        return req.future
+
+    def _loop(self):
+        while not self._stop:
+            batch: List[Request] = []
+            deadline = None
+            while len(batch) < self.batch_size:
+                timeout = 0.05 if deadline is None else max(
+                    0.0, deadline - time.monotonic())
+                try:
+                    req = self._q.get(timeout=timeout)
+                except queue.Empty:
+                    if batch:
+                        break
+                    continue
+                batch.append(req)
+                if deadline is None:
+                    deadline = time.monotonic() + self.max_wait
+            if not batch:
+                continue
+            try:
+                results = self.handler([r.payload for r in batch])
+                for r, res in zip(batch, results):
+                    r.future.set_result(res)
+            except BaseException as exc:
+                for r in batch:
+                    if not r.future.done():
+                        r.future.set_exception(exc)
+            self.batches_processed += 1
+            self.requests_processed += len(batch)
+            self.batch_fill.append(len(batch))
+
+    def close(self):
+        self._stop = True
+        self._th.join(timeout=1.0)
+
+    def stats(self):
+        fills = self.batch_fill or [0]
+        return {"batches": self.batches_processed,
+                "requests": self.requests_processed,
+                "mean_fill": sum(fills) / len(fills)}
+
+
+def pad_batch(payloads: List[np.ndarray], batch_size: int) -> np.ndarray:
+    """Stack variable-count payloads to a fixed batch (repeat last row)."""
+    arr = np.stack(payloads)
+    if len(payloads) < batch_size:
+        pad = np.repeat(arr[-1:], batch_size - len(payloads), axis=0)
+        arr = np.concatenate([arr, pad], axis=0)
+    return arr

@@ -1,0 +1,239 @@
+"""The serving engine: model endpoints as serverless functions with
+first-class freshen integration.
+
+A ``ModelEndpoint`` is the JAX analogue of the paper's λ (Algorithm 1):
+
+    procedure λ(tokens):
+        params   := FrFetch(0, WeightStore.load(NAME))        # DataGet
+        compiled := FrFetch(1, Executor.compile(score_fn))    # connection est.
+        FrWarm(2, compiled.warmup())                          # CWND warming
+        [data   := FrFetch(3, Datastore.get(CONST_KEY))]      # prefetch
+        return compiled(params, tokens)
+
+The freshen plan for the endpoint is exactly these entries in access order;
+``build_endpoint_plan`` can also be produced by §3.3 inference from traces
+(see tests).  The warm-budget controller implements the provider-policy half
+of ``warm_cwnd``: warming is only permitted when observed repetition
+justifies it.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.freshen import Action, FreshenPlan, PlanEntry
+from repro.core.runtime import FunctionSpec, RunContext, Runtime
+from repro.models import make_model
+from repro.serving.executor import Executor
+from repro.serving.weights import WeightStore
+
+
+@dataclass
+class WarmBudget:
+    """Provider-side policy half of warm_cwnd: allow warming only after
+    ``min_repetitions`` observed invocations of the same shape (repetitive
+    invocations anticipate workload characteristics, §3.2)."""
+    min_repetitions: int = 2
+    observed: Dict[Any, int] = field(default_factory=dict)
+
+    def observe(self, key):
+        self.observed[key] = self.observed.get(key, 0) + 1
+
+    def allows(self, key) -> bool:
+        return self.observed.get(key, 0) >= self.min_repetitions
+
+
+class ModelEndpoint:
+    """One servable model = one serverless function."""
+
+    def __init__(self, name: str, cfg: ModelConfig, store: WeightStore,
+                 executor: Optional[Executor] = None, *,
+                 batch_size: int = 4, seq_len: int = 64, app: str = "serving",
+                 datastore=None, prefetch_key: Optional[str] = None,
+                 prefetch_ttl: Optional[float] = None,
+                 warm_budget: Optional[WarmBudget] = None):
+        self.name = name
+        self.cfg = cfg
+        self.model = make_model(cfg)
+        self.store = store
+        self.executor = executor or Executor()
+        self.batch_size = batch_size
+        self.seq_len = seq_len
+        self.app = app
+        self.datastore = datastore
+        self.prefetch_key = prefetch_key
+        self.prefetch_ttl = prefetch_ttl
+        self.warm_budget = warm_budget or WarmBudget(min_repetitions=0)
+        self.timings: List[dict] = []
+
+    # ------------------------------------------------------------------
+    def _score_fn(self):
+        model = self.model
+
+        def score(params, tokens):
+            x, _ = model.forward(params, tokens)
+            return model._logits(params, x[:, -1:])
+        return score
+
+    def _specs(self):
+        sds = jax.ShapeDtypeStruct
+        params_spec = jax.eval_shape(
+            lambda: self.model.init(jax.random.PRNGKey(0)))
+        return (params_spec, sds((self.batch_size, self.seq_len), jnp.int32))
+
+    # ------------------------------------------------------------------
+    # The freshen plan: ordered resources, §3.3 fr_state indices 0..3
+    def build_plan(self, runtime: Runtime) -> FreshenPlan:
+        entries = [
+            PlanEntry("weights", Action.FETCH, self._load_weights,
+                      version_fn=lambda: self.store.version(self.name)),
+            PlanEntry("compiled", Action.FETCH, self._compile),
+            PlanEntry("warmup", Action.WARM, self._warmup),
+        ]
+        if self.datastore is not None and self.prefetch_key is not None:
+            entries.append(PlanEntry(
+                "prefetch", Action.FETCH,
+                lambda: self.datastore.get(self.prefetch_key)[0],
+                ttl=self.prefetch_ttl,
+                version_fn=lambda: self.datastore.version(self.prefetch_key)))
+        return FreshenPlan(entries)
+
+    def _load_weights(self):
+        params, real, modeled = self.store.load(self.name)
+        return params
+
+    def _compile(self):
+        compiled, dt = self.executor.compile(
+            f"{self.name}/score", self._score_fn(), self._specs())
+        return compiled
+
+    def _warmup(self):
+        key = (self.name, self.batch_size, self.seq_len)
+        if not self.warm_budget.allows(key):
+            return 0.0
+        compiled = self.executor.get(f"{self.name}/score", self._specs())
+        if compiled is None:
+            compiled = self._compile()
+        return self.executor.warmup(compiled, self._specs())
+
+    # ------------------------------------------------------------------
+    # Decode sessions: the KV cache is a freshen-preallocatable resource
+    # (the paper's buffer/CWND-warming analogue for serving state).
+    def _decode_fns(self, max_len: int):
+        model = self.model
+
+        def prefill(params, tokens):
+            return model.prefill(params, tokens, max_len=max_len)
+
+        def decode(params, cache, token, pos):
+            return model.decode_step(params, cache, token, pos)
+        return prefill, decode
+
+    def _compile_decode(self, max_len: int):
+        sds = jax.ShapeDtypeStruct
+        params_spec = jax.eval_shape(
+            lambda: self.model.init(jax.random.PRNGKey(0)))
+        prefill, decode = self._decode_fns(max_len)
+        c_pre, _ = self.executor.compile(
+            f"{self.name}/prefill{max_len}", prefill,
+            (params_spec, sds((self.batch_size, self.seq_len), jnp.int32)))
+        cache_spec = jax.eval_shape(
+            lambda: self.model.init_cache(self.batch_size, max_len))
+        c_dec, _ = self.executor.compile(
+            f"{self.name}/decode{max_len}", decode,
+            (params_spec, cache_spec,
+             sds((self.batch_size, 1), jnp.int32),
+             sds((self.batch_size,), jnp.int32)))
+        return c_pre, c_dec
+
+    def _prealloc_session(self, max_len: int):
+        """Allocate (for real) the decode cache buffers ahead of time."""
+        cache = self.model.init_cache(self.batch_size, max_len)
+        return jax.block_until_ready(cache)
+
+    def session_plan_entries(self, max_len: int):
+        """Extra freshen resources for generation endpoints."""
+        from repro.core.freshen import Action, PlanEntry
+        return [
+            PlanEntry("decode_executables", Action.FETCH,
+                      lambda: self._compile_decode(max_len)),
+            PlanEntry("session_cache", Action.FETCH,
+                      lambda: self._prealloc_session(max_len)),
+        ]
+
+    def generate(self, ctx: RunContext, tokens, n_steps: int, max_len: int,
+                 plan_offset: int):
+        """Autoregressive generation using freshened executables + cache.
+        ``plan_offset`` = fr_state index of 'decode_executables'."""
+        params = ctx.fr_fetch(0)
+        c_pre, c_dec = ctx.fr_fetch(plan_offset)
+        cache0 = ctx.fr_fetch(plan_offset + 1)      # preallocated buffers
+        logits, cache = c_pre(params, jnp.asarray(tokens, jnp.int32))
+        del cache0                                   # donated lineage
+        B, S = tokens.shape
+        out = [int(jnp.argmax(logits[0, -1]))]
+        pos = jnp.full((B,), S, jnp.int32)
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        for _ in range(n_steps - 1):
+            logits, cache = c_dec(params, cache, tok, pos)
+            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            pos = pos + 1
+            out.append(int(tok[0, 0]))
+        return out
+
+    def code(self, ctx: RunContext, args):
+        """The run-hook body (Algorithm 3: annotated λ)."""
+        t0 = time.monotonic()
+        tokens = jnp.asarray(args["tokens"], jnp.int32)
+        assert tokens.shape == (self.batch_size, self.seq_len), tokens.shape
+        params = ctx.fr_fetch(0)                  # FrFetch(0, DataGet(...))
+        t_w = time.monotonic()
+        compiled = ctx.fr_fetch(1)                # FrFetch(1, compile)
+        t_c = time.monotonic()
+        ctx.fr_warm(2)                            # FrWarm(2, warmup)
+        t_u = time.monotonic()
+        extra = ctx.fr_fetch(3) if len(ctx.runtime.fr_state.plan) > 3 else None
+        logits = compiled(params, tokens)
+        logits = jax.block_until_ready(logits)
+        t1 = time.monotonic()
+        self.warm_budget.observe((self.name, self.batch_size, self.seq_len))
+        timing = {"total": t1 - t0, "weights": t_w - t0,
+                  "compile": t_c - t_w, "warmup": t_u - t_c,
+                  "execute": t1 - t_u}
+        self.timings.append(timing)
+        return {"logits": np.asarray(logits), "timing": timing,
+                "extra": extra}
+
+    def spec(self) -> FunctionSpec:
+        return FunctionSpec(self.name, self.code,
+                            plan_factory=self.build_plan, app=self.app)
+
+
+class ServingEngine:
+    """A pool of endpoints behind a FreshenScheduler — the 'serverless
+    platform' of the evaluation."""
+
+    def __init__(self, scheduler=None):
+        from repro.core.scheduler import FreshenScheduler
+        self.scheduler = scheduler or FreshenScheduler()
+        self.endpoints: Dict[str, ModelEndpoint] = {}
+
+    def deploy(self, ep: ModelEndpoint) -> Runtime:
+        self.endpoints[ep.name] = ep
+        rt = self.scheduler.register(ep.spec())
+        rt.init()
+        return rt
+
+    def invoke(self, name: str, tokens, freshen_successors: bool = True):
+        return self.scheduler.invoke(
+            name, {"tokens": tokens}, freshen_successors=freshen_successors)
+
+    def chain(self, names: List[str], delay: float = 0.06):
+        self.scheduler.predictor.graph.add_chain(names, delay=delay)

@@ -1,0 +1,67 @@
+"""Executor: the XLA compile cache + warm-up machinery.
+
+``jit`` compilation is the TPU/JAX cold start (seconds of wall time) —
+``CompileResource`` freshens it by compiling ahead of the predicted
+invocation.  The cache is keyed by (name, shapes) and is runtime-scoped.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Executor:
+    def __init__(self):
+        self._cache: Dict[Tuple, Any] = {}
+        self._lock = threading.Lock()
+        self.compile_seconds: Dict[Tuple, float] = {}
+        self.compile_count = 0
+        self.hit_count = 0
+
+    @staticmethod
+    def _key(name: str, specs) -> Tuple:
+        leaves = jax.tree.leaves(specs)
+        return (name,) + tuple((tuple(l.shape), str(l.dtype)) for l in leaves)
+
+    # ------------------------------------------------------------------
+    def compile(self, name: str, fn: Callable, specs, *,
+                donate_argnums=()) -> Tuple[Any, float]:
+        """AOT lower+compile for the given ShapeDtypeStructs; cached.
+        Returns (compiled, seconds_spent_now)."""
+        key = self._key(name, specs)
+        with self._lock:
+            if key in self._cache:
+                self.hit_count += 1
+                return self._cache[key], 0.0
+        t0 = time.monotonic()
+        jitted = jax.jit(fn, donate_argnums=donate_argnums)
+        lowered = jitted.lower(*specs) if isinstance(specs, (list, tuple)) \
+            else jitted.lower(specs)
+        compiled = lowered.compile()
+        dt = time.monotonic() - t0
+        with self._lock:
+            self._cache[key] = compiled
+            self.compile_seconds[key] = dt
+            self.compile_count += 1
+        return compiled, dt
+
+    def get(self, name: str, specs) -> Optional[Any]:
+        with self._lock:
+            return self._cache.get(self._key(name, specs))
+
+    # ------------------------------------------------------------------
+    def warmup(self, compiled, specs) -> float:
+        """Run the compiled executable once on zeros: warms the dispatch
+        path, allocator arenas, and (on TPU) collective channels — the
+        CWND-warming analogue."""
+        args = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), specs)
+        t0 = time.monotonic()
+        out = compiled(*args) if isinstance(args, (list, tuple)) \
+            else compiled(args)
+        jax.block_until_ready(out)
+        return time.monotonic() - t0

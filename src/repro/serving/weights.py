@@ -1,0 +1,64 @@
+"""Versioned weight store: "downloading the ML model from a server", the
+paper's canonical redundant overhead.  Weights are real .npz checkpoints on
+disk (repro.checkpoint); loading measures real IO + deserialization time,
+plus the modeled tier transfer when the store sits behind a datastore tier.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+from typing import Any, Optional, Tuple
+
+import jax
+
+from repro.checkpoint import load_metadata, load_pytree, save_pytree
+from repro.core.network import TIERS, Connection
+
+
+class WeightStore:
+    def __init__(self, root: str, tier: str = "edge"):
+        self.root = root
+        self.tier = TIERS[tier]
+        os.makedirs(root, exist_ok=True)
+        self._versions: dict[str, int] = {}
+        self._templates: dict[str, Any] = {}
+        self._lock = threading.Lock()
+        self.load_count = 0
+
+    def _path(self, name: str) -> str:
+        return os.path.join(self.root, f"{name}.npz")
+
+    # ------------------------------------------------------------------
+    def publish(self, name: str, params) -> int:
+        """Store a new weight version; returns the version number."""
+        with self._lock:
+            v = self._versions.get(name, 0) + 1
+            self._versions[name] = v
+        save_pytree(self._path(name), params, metadata={"version": v})
+        with self._lock:
+            self._templates[name] = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+        return v
+
+    def version(self, name: str) -> int:
+        with self._lock:
+            return self._versions.get(name, 0)
+
+    def load(self, name: str, conn: Optional[Connection] = None
+             ) -> Tuple[Any, float, float]:
+        """Returns (params, real_seconds, modeled_transfer_seconds)."""
+        t0 = time.monotonic()
+        with self._lock:
+            template = self._templates[name]
+        params = load_pytree(self._path(name), template)
+        real = time.monotonic() - t0
+        nbytes = os.path.getsize(self._path(name))
+        conn = conn or Connection(self.tier)
+        modeled = conn.transfer(nbytes)
+        with self._lock:
+            self.load_count += 1
+        return params, real, modeled
+
+    def nbytes(self, name: str) -> int:
+        return os.path.getsize(self._path(name))

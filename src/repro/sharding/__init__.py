@@ -1,0 +1,5 @@
+from repro.sharding.partitioning import (batch_axes, cache_leaf_spec,  # noqa: F401
+                                         cache_spec, logits_constrainer,
+                                         param_spec, shard_cache_for_model,
+                                         shard_params, token_spec,
+                                         with_sharding)

@@ -1,0 +1,269 @@
+"""Parameter and activation sharding rules.
+
+Rules are path-based (matched on the leaf's key path), produce a
+PartitionSpec for the *unstacked* trailing dims, pad leading ``None`` for
+scan-stacking, and drop any axis whose dim is not divisible by the mesh axis
+size (e.g. granite's vocab 49155 stays replicated; tiny gate matrices stay
+replicated).
+
+Two modes:
+* ``serve`` — 1D: weights sharded over "model" only (tensor parallelism);
+* ``train`` — 2D: "model" + FSDP over "data" on the other matrix dim, so
+  params AND optimizer moments scale with the full mesh.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# rule table: leaf-name regex -> (serve_dims, train_dims) for trailing dims.
+# "M" = model axis, "D" = data axis (fsdp), None = replicated.
+_RULES = [
+    (r"embed$",            (("M", None),        ("M", "D"))),
+    (r"unembed$",          ((None, "M"),        ("D", "M"))),
+    (r"(wq|wk|wv|wi|wg|w_up|w_up1|w_up2|w_gate|w_rec|wq_a|wq_b|wkv_b|w_z|w_i|w_f|w_o)$",
+                           ((None, "M"),        ("D", "M"))),
+    (r"(wo|w_down|w_out)$", (("M", None),       ("M", "D"))),
+    (r"wkv_a$",            ((None, None),       ("D", None))),
+    (r"router$",           ((None, None),       ("D", None))),
+    (r"(bq|bk|bv)$",       (("M",),             ("M",))),
+    (r"conv_w$",           ((None, "M"),        (None, "M"))),
+    (r"(r_z|r_i|r_f|r_o|w_a|w_x)$", ((None, None, "M"), (None, None, "M"))),
+]
+
+# MoE expert-stacked weights: leading E dim -> expert parallelism on "model".
+_MOE_RULES = [
+    (r"(wi_e|wg_e)$",      (("M", None, None),  ("M", "D", None))),
+    (r"wo_e$",             (("M", None, None),  ("M", None, "D"))),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(f"[{p.idx}]")
+    return "/".join(parts)
+
+
+def _axis(tag: Optional[str], mesh) -> Optional[object]:
+    if tag is None:
+        return None
+    if tag == "M":
+        return "model"
+    if tag == "D":
+        # FSDP over data (and pod when present) for maximum param spread
+        return ("pod", "data") if "pod" in mesh.axis_names else "data"
+    raise ValueError(tag)
+
+
+def _fit(dims, shape, mesh):
+    """Drop assignments that don't divide the dim."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for d, ax in zip(shape, dims):
+        if ax is None:
+            out.append(None)
+            continue
+        n = sizes[ax] if isinstance(ax, str) else int(
+            np.prod([sizes[a] for a in ax]))
+        out.append(ax if d % n == 0 else None)
+    return tuple(out)
+
+
+def param_spec(path_str: str, shape, mesh, mode: str) -> P:
+    assert mode in ("serve", "train", "serve_dp")
+    if mode == "serve_dp":                    # replicated weights (DP serving)
+        return P(*([None] * len(shape)))
+    rules = _MOE_RULES + _RULES      # moe rules are more specific: first
+    for pat, (serve_dims, train_dims) in rules:
+        if re.search(pat, path_str):
+            dims = serve_dims if mode == "serve" else train_dims
+            if len(dims) > len(shape):        # e.g. bias rule on scalar
+                dims = dims[-len(shape):]
+            pad = (None,) * (len(shape) - len(dims))
+            tagged = pad + tuple(_axis(t, mesh) for t in dims)
+            return P(*_fit(tagged, shape, mesh))
+    return P(*([None] * len(shape)))          # norms, gates, scalars
+
+
+def shard_params(params_shape, mesh, mode: str):
+    """ShapeDtypeStruct tree -> matching tree of NamedSharding."""
+    def one(path, leaf):
+        spec = param_spec(_path_str(path), leaf.shape, mesh, mode)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def with_sharding(specs_tree, shardings_tree):
+    """Attach shardings to a ShapeDtypeStruct tree."""
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        specs_tree, shardings_tree)
+
+
+# ----------------------------------------------------------------------
+# Activations / caches
+def batch_axes(mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _mesh_size(mesh, axes) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return int(np.prod([sizes[a] for a in axes]))
+
+
+def token_spec(mesh, global_batch: int) -> P:
+    ba = batch_axes(mesh)
+    if global_batch % _mesh_size(mesh, ba) == 0:
+        return P(ba)
+    return P(None)
+
+
+def cache_spec(path_str: str, shape, mesh, global_batch: int) -> P:
+    """KV caches and recurrent states.
+
+    Preference order: shard batch over data(+pod); if batch unshardable
+    (long_500k B=1) shard the sequence dim of attention caches instead;
+    shard heads (or the feature dim) over model when divisible.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    ba = batch_axes(mesh)
+    nb = _mesh_size(mesh, ba)
+    name = path_str.rsplit("/", 1)[-1]
+    model = sizes["model"]
+    # scan-stacked caches carry a leading (repeats,) dim: strip it, shard the
+    # logical dims, then pad the spec back out.
+    arity = {"k": 4, "v": 4, "ckv": 3, "kr": 3, "conv": 3, "C": 4}.get(name)
+    if arity is None:
+        arity = 3 if name == "n" and len(shape) >= 3 else 2
+    lead = max(0, len(shape) - arity)
+    if lead:
+        inner = cache_spec(path_str, shape[lead:], mesh, global_batch)
+        return P(*((None,) * lead + tuple(inner)))
+    b_ax = ba if (shape and shape[0] % nb == 0 and global_batch > 1) else None
+
+    def m_if(n):
+        return "model" if n % model == 0 else None
+
+    if name in ("k", "v"):                    # (B, L, H, hd)
+        B, L, H, hd = shape
+        spec = [b_ax, None, m_if(H), None]
+        if b_ax is None and L % nb == 0:
+            spec[1] = ba                      # sequence-shard the cache
+        if spec[2] is None:
+            spec[3] = m_if(hd)
+        return P(*spec)
+    if name in ("ckv", "kr"):                 # (B, L, r)
+        # MLA latent caches have no head dim: shard the latent (lora) dim
+        # over model — attention score einsums contract it, so GSPMD
+        # partial-sums + all-reduces (small); cuts cache HBM 16x.
+        B, L, r = shape
+        spec = [b_ax, None, m_if(r)]
+        if b_ax is None and L % nb == 0:
+            spec[1] = ba
+        return P(*spec)
+    if name in ("h", "c", "n", "m") and len(shape) == 2:   # (B, d)
+        # recurrent states stay model-replicated: sharding the feature dim
+        # misaligns with the block-diagonal recurrent matmuls and forces
+        # per-TIMESTEP reshards (measured: 209 GB/device on xlstm prefill)
+        return P(b_ax, None)
+    if name == "conv":                        # (B, w-1, r)
+        return P(b_ax, None, m_if(shape[2]))
+    if name == "C" and len(shape) == 4:       # (B, nh, hd, hd)
+        return P(b_ax, None, m_if(shape[2]), None)
+    if name in ("n",) and len(shape) == 3:    # (B, nh, hd)
+        return P(b_ax, None, m_if(shape[2]))
+    if name == "m" and len(shape) == 2:
+        return P(b_ax, None)
+    return P(*([b_ax] + [None] * (len(shape) - 1))) if shape else P()
+
+
+def cache_leaf_spec(kind: str, name: str, shape, mesh,
+                    global_batch: int, strategy: str = "tp") -> P:
+    """Kind-aware cache sharding (disambiguates e.g. slstm 'n' (B,d) from
+    mlstm 'n' (B,nh,hd)); handles one leading scan-stack dim.
+
+    strategy "dp_cp": weights are replicated, so attention caches shard the
+    SEQUENCE dim over the idle model axis (context parallelism) and batch
+    over data; recurrent states shard batch only."""
+    arities = {
+        "attn": {"k": 4, "v": 4},
+        "attn_local": {"k": 4, "v": 4},
+        "attn_moe": {"k": 4, "v": 4},
+        "mla": {"ckv": 3, "kr": 3},
+        "mla_moe": {"ckv": 3, "kr": 3},
+        "rglru": {"h": 2, "conv": 3},
+        "mlstm": {"C": 4, "n": 3, "m": 2, "conv": 3},
+        "slstm": {"c": 2, "n": 2, "h": 2, "m": 2},
+    }[kind]
+    arity = arities[name]
+    lead = len(shape) - arity
+    assert lead >= 0, (kind, name, shape)
+    inner = shape[lead:]
+    if strategy == "dp_cp":
+        ba = batch_axes(mesh)
+        nb = _mesh_size(mesh, ba)
+        b_ax = ba if (inner[0] % nb == 0 and global_batch > 1) else None
+        model = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+        if name in ("k", "v", "ckv", "kr"):
+            seq_ax = "model" if inner[1] % model == 0 else None
+            spec = (b_ax, seq_ax) + (None,) * (arity - 2)
+        else:
+            spec = (b_ax,) + (None,) * (arity - 1)
+        return P(*((None,) * lead + spec))
+    spec = cache_spec(f"{kind}/{name}", shape[lead:], mesh, global_batch)
+    return P(*((None,) * lead + tuple(spec)))
+
+
+def shard_cache_for_model(cfg, cache_shape, mesh, global_batch: int,
+                          strategy: str = "tp"):
+    """Model-structure-aware shardings for the full decode cache tree."""
+    out = []
+    for si, (pattern, repeats) in enumerate(cfg.segments):
+        seg = []
+        for pi, kind in enumerate(pattern):
+            d = cache_shape[si][pi]
+            seg.append({
+                k: NamedSharding(mesh, cache_leaf_spec(
+                    kind, k, v.shape, mesh, global_batch, strategy))
+                for k, v in d.items()})
+        out.append(tuple(seg))
+    return tuple(out)
+
+
+def logits_constrainer(mesh, strategy: str = "tp"):
+    """Sharding-constraint hook: activations batch-sharded at every block
+    boundary (sequence additionally sharded over the model axis under
+    "dp_cp"); loss logits vocab-sharded.  Without the activation constraint
+    GSPMD can pick replicated layouts for the scan carry, exploding per-device
+    memory (observed: 600 GB/device on qwen2 train_4k)."""
+    ba = batch_axes(mesh)
+    model_size = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+
+    def constrain(x, tag):
+        if tag == "logits":
+            B, S, V = x.shape
+            spec = P(ba if B % _mesh_size(mesh, ba) == 0 else None, None,
+                     "model" if V % model_size == 0 else None)
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, spec))
+        if tag == "activation":
+            B = x.shape[0]
+            b_ax = ba if B % _mesh_size(mesh, ba) == 0 else None
+            seq_ax = None
+            if (strategy == "dp_cp" and x.ndim == 3 and x.shape[1] > 1
+                    and x.shape[1] % model_size == 0):
+                seq_ax = "model"
+            spec = P(*((b_ax, seq_ax) + (None,) * (x.ndim - 2))[:x.ndim])
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, spec))
+        return x
+    return constrain

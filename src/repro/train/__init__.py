@@ -1,0 +1,3 @@
+from repro.train.optimizer import (OptimizerConfig, OptState, adamw_update,  # noqa: F401
+                                   init_opt_state, schedule)
+from repro.train.trainer import Trainer, TrainerConfig, make_train_step  # noqa: F401

@@ -1,0 +1,108 @@
+"""Training loop: jitted train step with microbatch gradient accumulation
+(scan over microbatches), loss/metric tracking, periodic checkpointing.
+
+``make_train_step`` is also what the multi-pod dry-run lowers: a pure
+function (params, opt_state, batch) -> (params, opt_state, metrics).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.train.optimizer import (OptimizerConfig, OptState, adamw_update,
+                                   init_opt_state)
+
+
+def make_train_step(model: Model, opt_cfg: OptimizerConfig, *,
+                    num_microbatches: int = 1, constrain=None,
+                    seq_chunk: int = 512) -> Callable:
+    """Full step: fwd+bwd (accumulated over microbatches) + AdamW update."""
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch, constrain=constrain,
+                                   seq_chunk=seq_chunk)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step(params, opt_state: OptState, batch):
+        if num_microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                B = x.shape[0]
+                assert B % num_microbatches == 0
+                return x.reshape(num_microbatches, B // num_microbatches,
+                                 *x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def acc_step(carry, mb):
+                g_acc, l_acc = carry
+                (loss, _), grads = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), g_acc, grads)
+                return (g_acc, l_acc + loss), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (g_sum, l_sum), _ = jax.lax.scan(
+                acc_step, (zeros, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / num_microbatches, g_sum)
+            loss = l_sum / num_microbatches
+            metrics = {"xent": loss, "aux": jnp.zeros((), jnp.float32)}
+        params, opt_state, opt_metrics = adamw_update(
+            opt_cfg, params, grads, opt_state)
+        return params, opt_state, {"loss": loss, **metrics, **opt_metrics}
+
+    return step
+
+
+@dataclass
+class TrainerConfig:
+    steps: int = 100
+    log_every: int = 10
+    checkpoint_every: int = 0           # 0 => disabled
+    checkpoint_path: str = ""
+    num_microbatches: int = 1
+
+
+class Trainer:
+    def __init__(self, model: Model, opt_cfg: OptimizerConfig,
+                 tcfg: TrainerConfig, data_iter, params=None, key=None):
+        self.model = model
+        self.opt_cfg = opt_cfg
+        self.tcfg = tcfg
+        self.data = data_iter
+        self.params = params if params is not None else model.init(
+            key or jax.random.PRNGKey(0))
+        self.opt_state = init_opt_state(self.params)
+        self.step_fn = jax.jit(make_train_step(
+            model, opt_cfg, num_microbatches=tcfg.num_microbatches,
+            seq_chunk=256))
+        self.history: list[dict] = []
+
+    def run(self) -> list[dict]:
+        for i in range(self.tcfg.steps):
+            batch = next(self.data)
+            t0 = time.monotonic()
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            metrics["step"] = i
+            metrics["seconds"] = time.monotonic() - t0
+            self.history.append(metrics)
+            if self.tcfg.checkpoint_every and \
+                    (i + 1) % self.tcfg.checkpoint_every == 0:
+                from repro.checkpoint import save_pytree
+                save_pytree(self.tcfg.checkpoint_path,
+                            {"params": self.params,
+                             "mu": self.opt_state.mu,
+                             "nu": self.opt_state.nu},
+                            metadata={"step": i + 1})
+        return self.history

@@ -1,0 +1,9 @@
+import os
+
+# Smoke tests and benches must see ONE device; only launch/dryrun.py sets
+# xla_force_host_platform_device_count (as its first two lines).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

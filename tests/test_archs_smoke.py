@@ -1,0 +1,95 @@
+"""Per-architecture smoke tests: instantiate a REDUCED same-family variant
+(≤2-ish layers via pattern, d_model≤512, ≤4 experts) and run one forward /
+train step and one decode step on CPU, asserting shapes + finiteness."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import INPUT_SHAPES, get_config, list_archs
+from repro.models import make_model
+
+ARCHS = list_archs()
+
+
+def _reduced(arch):
+    cfg = get_config(arch).reduced()
+    if cfg.moe:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=4.0))
+    return cfg
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_validates(arch):
+    cfg = get_config(arch)
+    assert cfg.n_layers == len(cfg.layer_kinds)
+    assert cfg.param_count() > 0
+    assert cfg.active_param_count() <= cfg.param_count()
+    # headline sanity: param count within 45% of the advertised size
+    advertised = {"pixtral-12b": 12e9, "musicgen-medium": 1.5e9,
+                  "gemma2-27b": 27e9, "deepseek-v2-lite-16b": 16e9,
+                  "phi3-medium-14b": 14e9, "nemotron-4-15b": 15e9,
+                  "granite-moe-1b-a400m": 1.3e9, "qwen2-0.5b": 0.5e9,
+                  "recurrentgemma-2b": 2.7e9, "xlstm-350m": 0.35e9}[arch]
+    assert 0.55 * advertised < cfg.param_count() < 1.55 * advertised, (
+        arch, cfg.param_count())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = _reduced(arch)
+    assert cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.n_experts <= 4
+    m = make_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    B, S = 2, 64
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "targets": toks}
+    if cfg.frontend != "none":
+        batch["frontend_embeds"] = jnp.zeros((B, S, cfg.d_model), cfg.dtype)
+        batch["frontend_mask"] = jnp.zeros((B, S), bool).at[:, :4].set(True)
+
+    (loss, metrics), grads = jax.jit(jax.value_and_grad(
+        m.loss, has_aux=True))(params, batch)
+    assert loss.shape == ()
+    assert jnp.isfinite(loss), (arch, loss)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    assert jnp.isfinite(gnorm), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_serve_step(arch):
+    cfg = _reduced(arch)
+    m = make_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    B, S0 = 2, 32
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S0), 0, cfg.vocab_size)
+    kw = {}
+    if cfg.frontend != "none":
+        kw = dict(frontend_embeds=jnp.zeros((B, S0, cfg.d_model), cfg.dtype),
+                  frontend_mask=jnp.zeros((B, S0), bool).at[:, :2].set(True))
+    logits, cache = jax.jit(lambda p, t: m.prefill(p, t, max_len=S0 + 4, **kw))(
+        params, toks)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), arch
+    lg, cache = jax.jit(m.decode_step)(
+        params, cache, toks[:, -1:], jnp.full((B,), S0, jnp.int32))
+    assert lg.shape == (B, 1, cfg.vocab_size)
+    assert bool(jnp.isfinite(lg).all()), arch
+
+
+def test_shape_suite_is_assigned():
+    assert set(INPUT_SHAPES) == {"train_4k", "prefill_32k", "decode_32k",
+                                 "long_500k"}
+    s = INPUT_SHAPES["long_500k"]
+    assert (s.seq_len, s.global_batch, s.mode) == (524288, 1, "decode")
+
+
+def test_long500k_support_matrix():
+    expected_run = {"gemma2-27b", "recurrentgemma-2b", "xlstm-350m"}
+    run = {a for a in ARCHS if get_config(a).supports_shape("long_500k")}
+    assert run == expected_run, run

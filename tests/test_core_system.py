@@ -1,0 +1,270 @@
+"""Prediction, scheduling, accounting, inference, triggers, network model."""
+import time
+
+import pytest
+
+from repro.core import (Accountant, ChainGraph, Connection, FreshenCache,
+                        FreshenScheduler, FunctionSpec, HybridPredictor,
+                        MarkovPredictor, Runtime, ServiceClass, TIERS)
+from repro.core.freshen import Action, FreshenPlan, PlanEntry
+from repro.core.infer import TraceCollector, analyze_traces, build_plan
+from repro.core.network import INITIAL_CWND
+
+
+# ----------------------------------------------------------------------
+def test_chain_graph_predicts_successors():
+    g = ChainGraph().add_chain(["a", "b", "c", "d"])
+    g.add_edge("a", "x", probability=0.3, delay=0.25)
+    succ = g.successors("a")
+    assert {p.fn for p in succ} == {"b", "x"}
+    assert g.linear_depth_from("a") == 3
+    assert g.successors("d") == []
+
+
+def test_markov_predictor_learns_transitions():
+    m = MarkovPredictor(min_count=3)
+    t = 0.0
+    for _ in range(10):
+        for fn in ["ingest", "analyze", "store"]:
+            m.observe(fn, t)
+            t += 0.1
+        m.reset_session()
+    preds = m.successors("ingest")
+    assert preds and preds[0].fn == "analyze"
+    assert preds[0].probability > 0.8
+    assert 0.05 < preds[0].expected_delay < 0.2
+    assert m.successors("store") == []   # session reset: no wraparound edge
+
+
+def test_markov_min_count_gate():
+    m = MarkovPredictor(min_count=5)
+    m.observe("a", 0.0)
+    m.observe("b", 0.1)
+    assert m.successors("a") == []       # not enough evidence yet
+
+
+# ----------------------------------------------------------------------
+def test_accounting_misprediction_and_gating():
+    acc = Accountant(misprediction_horizon=0.5, disable_after=4,
+                     disable_miss_rate=0.6)
+    acc.service_class["app"] = ServiceClass.LATENCY_SENSITIVE
+    # 5 freshens, none followed by an invocation -> all mispredictions
+    now = 100.0
+    for i in range(5):
+        acc.record_freshen("app", "f", 0.01, now=now + i * 0.01)
+    acc.sweep_expired("app", now=now + 10)
+    b = acc.bill("app")
+    assert b.mispredicted_freshens == 5
+    assert not acc.should_freshen("app", confidence=0.9)   # gate tripped
+
+
+def test_accounting_useful_freshens_keep_gate_open():
+    acc = Accountant(misprediction_horizon=5.0, disable_after=4)
+    now = 0.0
+    for i in range(6):
+        acc.record_freshen("app", "f", 0.01, now=now)
+        acc.record_invocation("app", "f", 0.1, now=now + 0.05)
+        now += 1.0
+    b = acc.bill("app")
+    assert b.useful_freshens == 6 and b.mispredicted_freshens == 0
+    assert acc.should_freshen("app", confidence=0.9)
+    assert 0 < b.freshen_overhead_ratio < 0.2
+
+
+def test_service_class_thresholds():
+    acc = Accountant()
+    acc.service_class["lat"] = ServiceClass.LATENCY_SENSITIVE
+    acc.service_class["std"] = ServiceClass.STANDARD
+    acc.service_class["batch"] = ServiceClass.BATCH
+    assert acc.should_freshen("lat", 0.25)        # aggressive
+    assert not acc.should_freshen("std", 0.25)    # below 0.5
+    assert acc.should_freshen("std", 0.7)
+    assert not acc.should_freshen("batch", 0.99)  # disabled
+
+
+# ----------------------------------------------------------------------
+def test_scheduler_end_to_end_chain():
+    fetched = {"n": 0}
+
+    def make_plan(rt):
+        def fetch():
+            time.sleep(0.02)
+            fetched["n"] += 1
+            return {"model": b"weights"}
+        return FreshenPlan([PlanEntry("DataGet", Action.FETCH, fetch)])
+
+    def code_a(ctx, args):
+        return "a-done"
+
+    def code_b(ctx, args):
+        data = ctx.fr_fetch(0)
+        return ("b-done", data["model"])
+
+    sched = FreshenScheduler()
+    sched.predictor.graph.add_chain(["fa", "fb"])
+    sched.register(FunctionSpec("fa", code_a, app="app1"))
+    sched.register(FunctionSpec("fb", code_b, plan_factory=make_plan,
+                                app="app1"))
+    sched.runtimes["fa"].init()
+    sched.runtimes["fb"].init()
+
+    out_a = sched.invoke("fa")            # triggers freshen of fb
+    time.sleep(0.1)                        # freshen window (trigger delay)
+    out_b = sched.invoke("fb", freshen_successors=False)
+    assert out_a == "a-done"
+    assert out_b == ("b-done", b"weights")
+    assert fetched["n"] == 1
+    st = sched.runtimes["fb"].fr_state.stats()
+    assert st["freshened"] == 1 and st["inline"] == 0 and st["hits"] == 1
+    assert any(e.dispatched for e in sched.events)
+
+
+def test_scheduler_policy_gates_low_confidence():
+    sched = FreshenScheduler()
+    sched.predictor.graph.add_edge("fa", "fb", probability=0.1)
+    sched.register(FunctionSpec("fa", lambda c, a: None, app="x"))
+    sched.register(FunctionSpec("fb", lambda c, a: None, app="x"))
+    sched.invoke("fa")
+    time.sleep(0.02)
+    assert any(e.reason == "policy-gated" for e in sched.events)
+
+
+# ----------------------------------------------------------------------
+def test_infer_constant_vs_varying_args():
+    col = TraceCollector()
+
+    def fn(args):
+        col.record("get", "model", ("creds", "model-v1"))     # constant
+        col.record("get", "user_blob", ("creds", args))        # varies
+        col.record("put", "results", ("creds", "results-tbl"))  # constant
+
+    traces = []
+    for a in ["u1", "u2"]:
+        col.begin()
+        fn(a)
+        traces.append(col.end())
+    inferred = analyze_traces(traces)
+    by_name = {r.resource: r for r in inferred}
+    assert by_name["model"].constant
+    assert not by_name["user_blob"].constant
+    assert by_name["results"].action == Action.WARM
+    plan = build_plan(inferred, {"model": lambda: "m",
+                                 "results": lambda: None,
+                                 "user_blob": lambda: None})
+    names = [e.name for e in plan]
+    assert names == ["model", "results"]       # varying arg excluded; ordered
+
+
+def test_infer_unknown_library_is_not_fatal():
+    col = TraceCollector()
+    col.begin()
+    col.record("get", "exotic", ("x",))
+    traces = [col.end()]
+    plan = build_plan(analyze_traces(traces), thunks={})
+    assert len(plan) == 0                       # failure to infer: empty plan
+
+
+# ----------------------------------------------------------------------
+def test_connection_slow_start_and_warming():
+    conn = Connection(TIERS["remote"])
+    conn.establish()
+    nbytes = 10 * 1024 * 1024
+    cold = conn.transfer(nbytes)
+    warm = conn.transfer(nbytes)               # window now open
+    assert warm < cold                          # slow start gone
+    # idle decay brings slow start back (RFC 2861)
+    conn.last_activity -= 10.0
+    decayed = conn.transfer(nbytes)
+    assert decayed > warm
+    assert conn.cwnd >= INITIAL_CWND
+
+
+def test_connection_warm_action_speeds_first_transfer():
+    tier = TIERS["remote"]
+    cold_conn = Connection(tier)
+    cold_conn.establish()
+    t_cold = cold_conn.transfer(5 * 1024 * 1024)
+    warm_conn = Connection(tier)
+    warm_conn.establish()
+    warm_conn.warm()                            # freshen warming action
+    t_warm = warm_conn.transfer(5 * 1024 * 1024)
+    assert t_warm < t_cold * 0.7                # paper: 51-72% improvement
+
+
+def test_tls_establish_costs_more():
+    plain = Connection(TIERS["remote"]).establish()
+    tls = Connection(TIERS["remote"], tls=True).establish()
+    assert tls > plain
+
+
+def test_cache_ttl_and_version():
+    now = [0.0]
+    c = FreshenCache(default_ttl=10.0, clock=lambda: now[0])
+    calls = {"n": 0}
+
+    def fetch():
+        calls["n"] += 1
+        return calls["n"]
+
+    assert c.get_or_fetch("k", fetch) == 1
+    assert c.get_or_fetch("k", fetch) == 1      # hit
+    now[0] = 11.0
+    assert c.get_or_fetch("k", fetch) == 2      # TTL expiry
+    ver = [1]
+    assert c.get_or_fetch("k2", fetch, version_fn=lambda: ver[0]) == 3
+    ver[0] = 2
+    assert c.get_or_fetch("k2", fetch, version_fn=lambda: ver[0]) == 4
+    assert c.stats()["stale_evictions"] >= 1
+
+
+def test_trigger_delay_ordering():
+    """Direct/step are fast; storage (polling) is the slowest — the ordering
+    of Table 1."""
+    from repro.core.triggers import measure_trigger_delays
+    d = measure_trigger_delays(n=20)
+    assert d["direct"] < 0.05
+    assert d["step"] < 0.1
+    assert d["storage"] > d["direct"]
+    assert all(v == v for v in d.values())      # no NaNs
+
+
+def test_chain_level_isolation_scope():
+    """§6 Discussion: chain-level isolation — functions in a scope group
+    share runtime-scoped state, so a resource freshened by one member's
+    plan is visible to the whole chain."""
+    from repro.core.freshen import Action, FreshenPlan, PlanEntry
+
+    fetches = {"n": 0}
+
+    def plan_a(rt):
+        def fetch():
+            fetches["n"] += 1
+            val = {"model": 42}
+            rt.cache.put("shared-model", val, ttl=60)
+            return val
+        return FreshenPlan([PlanEntry("model", Action.FETCH, fetch)])
+
+    def code_a(ctx, args):
+        return ctx.fr_fetch(0)["model"]
+
+    def code_b(ctx, args):
+        hit, val = ctx.runtime.cache.get("shared-model")
+        assert hit, "chain scope must share the freshen cache"
+        return val["model"] + 1
+
+    from repro.core.scheduler import FreshenScheduler
+    sched = FreshenScheduler()
+    ra = sched.register(FunctionSpec("fa", code_a, plan_factory=plan_a),
+                        scope_group="chain-1")
+    rb = sched.register(FunctionSpec("fb", code_b), scope_group="chain-1")
+    ra.init(); rb.init()
+    assert ra.cache is rb.cache and ra.scope is rb.scope
+    ra.freshen(blocking=True)
+    assert sched.invoke("fa", freshen_successors=False) == 42
+    assert sched.invoke("fb", freshen_successors=False) == 43
+    assert fetches["n"] == 1       # fetched once for the whole chain
+    # separate group gets separate scope
+    rc = sched.register(FunctionSpec("fc", code_a, plan_factory=plan_a),
+                        scope_group="chain-2")
+    rc.init()
+    assert rc.cache is not ra.cache

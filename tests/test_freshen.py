@@ -1,0 +1,159 @@
+"""Algorithm 2-5 semantics: state machine, synchronization, TTL/versions,
+and the three Figure-3 timings (freshen-before / concurrent / never)."""
+import threading
+import time
+
+import pytest
+
+from repro.core.freshen import (Action, FreshenPlan, FreshenState, FrState,
+                                PlanEntry)
+
+
+def _plan_one(counter, value="v", ttl=None, version_fn=None, delay=0.0):
+    def thunk():
+        if delay:
+            time.sleep(delay)
+        counter["n"] += 1
+        return value
+    return FreshenPlan([PlanEntry("r0", Action.FETCH, thunk, ttl=ttl,
+                                  version_fn=version_fn)])
+
+
+def test_fetch_after_freshen_uses_prefetched_result():
+    c = {"n": 0}
+    st = FreshenState(_plan_one(c))
+    st.freshen()                       # freshen-before (Fig 3 left)
+    assert st.entries[0].state is FrState.FINISHED
+    assert st.fr_fetch(0) == "v"
+    assert c["n"] == 1                 # executed exactly once
+    assert st.stats()["hits"] == 1
+    assert st.stats()["freshened"] == 1
+
+
+def test_fetch_without_freshen_runs_inline():
+    c = {"n": 0}
+    st = FreshenState(_plan_one(c))
+    assert st.fr_fetch(0) == "v"       # freshen never ran
+    assert c["n"] == 1
+    assert st.stats()["inline"] == 1
+    assert st.fr_fetch(0) == "v"       # second call: runtime reuse hit
+    assert c["n"] == 1
+
+
+def test_fetch_concurrent_with_freshen_waits():
+    """Fig 3 right: freshen starts first but is slow; λ must FrWait."""
+    c = {"n": 0}
+    st = FreshenState(_plan_one(c, delay=0.15))
+    th = st_thread = threading.Thread(target=st.freshen, daemon=True)
+    th.start()
+    time.sleep(0.03)                   # freshen is now RUNNING
+    assert st.entries[0].state is FrState.RUNNING
+    t0 = time.monotonic()
+    out = st.fr_fetch(0)
+    waited = time.monotonic() - t0
+    th.join()
+    assert out == "v"
+    assert c["n"] == 1                 # no double execution
+    assert waited > 0.05               # it actually waited
+    assert st.stats()["waits"] >= 1
+
+
+def test_function_faster_than_freshen_claims_inline():
+    """If λ reaches the resource before freshen, freshen must skip it."""
+    c = {"n": 0}
+    st = FreshenState(_plan_one(c))
+    assert st.fr_fetch(0) == "v"
+    stats = st.freshen()
+    assert stats["skipped"] == 1 and stats["done"] == 0
+    assert c["n"] == 1
+
+
+def test_ttl_staleness_triggers_refetch():
+    c = {"n": 0}
+    now = [0.0]
+    plan = _plan_one(c, ttl=1.0)
+    st = FreshenState(plan, clock=lambda: now[0])
+    st.freshen()
+    assert c["n"] == 1
+    assert st.fr_fetch(0) == "v" and c["n"] == 1
+    now[0] = 2.0                       # past TTL
+    assert st.fr_fetch(0) == "v"
+    assert c["n"] == 2                 # refetched
+
+
+def test_version_staleness_triggers_refetch():
+    c = {"n": 0}
+    ver = [1]
+    plan = _plan_one(c, version_fn=lambda: ver[0])
+    st = FreshenState(plan)
+    st.freshen()
+    assert c["n"] == 1
+    st.fr_fetch(0)
+    assert c["n"] == 1
+    ver[0] = 2                         # a newer version is available
+    st.fr_fetch(0)
+    assert c["n"] == 2
+
+
+def test_freshen_failure_is_not_fatal():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("network blip")
+        return "ok"
+
+    st = FreshenState(FreshenPlan([PlanEntry("r", Action.FETCH, flaky)]))
+    stats = st.freshen()               # fails silently
+    assert stats["failed"] == 1
+    assert st.fr_fetch(0) == "ok"      # inline fallback succeeds
+    assert calls["n"] == 2
+
+
+def test_warm_semantics():
+    warmed = {"n": 0}
+
+    def warm():
+        warmed["n"] += 1
+
+    st = FreshenState(FreshenPlan([PlanEntry("conn", Action.WARM, warm)]))
+    st.freshen()
+    assert warmed["n"] == 1
+    st.fr_warm(0)                      # already warmed: no-op
+    assert warmed["n"] == 1
+    st2 = FreshenState(FreshenPlan([PlanEntry("conn", Action.WARM, warm)]))
+    st2.fr_warm(0)                     # never freshened: inline warm
+    assert warmed["n"] == 2
+
+
+def test_multi_resource_order_and_indexing():
+    """Algorithm 2: resources are indexed by access order (0=DataGet,
+    1=DataPut) and freshen walks them in order."""
+    order = []
+    plan = FreshenPlan([
+        PlanEntry("DataGet", Action.FETCH, lambda: order.append(0) or "data"),
+        PlanEntry("DataPut", Action.WARM, lambda: order.append(1)),
+    ])
+    st = FreshenState(plan)
+    st.freshen()
+    assert order == [0, 1]
+    assert st.fr_fetch(0) == "data"
+    st.fr_warm(1)
+    assert st.stats()["hits"] == 2
+
+
+def test_freshen_exactly_once_under_heavy_concurrency():
+    """Core invariant: N wrappers + M freshen threads -> one execution."""
+    c = {"n": 0}
+    st = FreshenState(_plan_one(c, delay=0.02))
+    results = []
+    threads = [threading.Thread(target=lambda: results.append(st.fr_fetch(0)))
+               for _ in range(16)]
+    threads += [threading.Thread(target=st.freshen) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert c["n"] == 1
+    assert len(results) == 16 and all(r == "v" for r in results)

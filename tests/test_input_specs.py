@@ -1,0 +1,59 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every (arch x shape) —
+weak-type-correct, no allocation, cache trees structurally equal to
+init_cache."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import INPUT_SHAPES, get_config, list_archs
+from repro.models import make_model
+
+
+@pytest.mark.parametrize("arch", list_archs())
+@pytest.mark.parametrize("shape_name", list(INPUT_SHAPES))
+def test_input_specs_cover_all_combos(arch, shape_name):
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    if not cfg.supports_shape(shape_name):
+        pytest.skip("documented long_500k skip (DESIGN.md)")
+    model = make_model(cfg)
+    specs = model.input_specs(shape)
+    leaves = jax.tree.leaves(specs)
+    assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+    if shape.mode in ("train", "prefill"):
+        assert specs["tokens"].shape == (shape.global_batch, shape.seq_len)
+        assert specs["tokens"].dtype == jnp.int32
+        if cfg.frontend != "none":
+            assert specs["frontend_embeds"].shape == (
+                shape.global_batch, shape.seq_len, cfg.d_model)
+    if shape.mode == "train":
+        assert specs["targets"].shape == specs["tokens"].shape
+    if shape.mode == "decode":
+        assert specs["token"].shape == (shape.global_batch, 1)
+        assert specs["pos"].shape == (shape.global_batch,)
+        # cache structure matches init_cache eval_shape exactly
+        ref = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len))
+        assert jax.tree.structure(specs["cache"]) == jax.tree.structure(ref)
+        for a, b in zip(jax.tree.leaves(specs["cache"]),
+                        jax.tree.leaves(ref)):
+            assert a.shape == b.shape and a.dtype == b.dtype
+        # local-attention caches are ring-buffer bounded
+        if cfg.window_size and shape.seq_len > cfg.window_size:
+            sizes = [l.shape for l in jax.tree.leaves(specs["cache"])]
+            assert any(s[2] == cfg.window_size for s in sizes
+                       if len(s) == 5), "expected ring-buffered local cache"
+
+
+def test_decode_cache_memory_sanity():
+    """gemma2 long_500k cache: local layers bounded by the window."""
+    cfg = get_config("gemma2-27b")
+    model = make_model(cfg)
+    specs = model.input_specs(INPUT_SHAPES["long_500k"])
+    total = sum(l.size * l.dtype.itemsize
+                for l in jax.tree.leaves(specs["cache"]))
+    # 23 global layers x 500k + 23 local layers x 4096 only
+    assert total < 120e9, total / 1e9
+    local = [l for l in jax.tree.leaves(specs["cache"])
+             if len(l.shape) == 5 and l.shape[2] == cfg.window_size]
+    assert local, "local layers must use ring buffers at 500k"

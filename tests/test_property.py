@@ -1,0 +1,150 @@
+"""Property-based tests (hypothesis) on system invariants:
+
+1. Freshen exactly-once: under ANY interleaving of wrapper calls and freshen
+   hooks, each fresh resource is executed exactly once and every fr_fetch
+   returns the correct value.
+2. Wrapper-result invariance: the function's observable result is identical
+   whether freshen ran before, concurrently, or never (Figure 3).
+3. Cache freshness: a get after TTL expiry never returns the stale value.
+4. Markov predictor probabilities are a distribution and respect counts.
+5. Connection model: warming never hurts; transfer time is monotone in size.
+6. MoE dispatch equivalence: einsum and gather dispatch agree for any
+   routing produced by random inputs.
+"""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cache import FreshenCache
+from repro.core.freshen import Action, FreshenPlan, FreshenState, PlanEntry
+from repro.core.network import TIERS, Connection
+from repro.core.prediction import MarkovPredictor
+
+
+@settings(max_examples=25, deadline=None)
+@given(n_resources=st.integers(1, 5),
+       schedule=st.lists(st.sampled_from(["freshen", "fetch", "refetch"]),
+                         min_size=1, max_size=8))
+def test_exactly_once_any_schedule(n_resources, schedule):
+    counts = [0] * n_resources
+
+    def mk(i):
+        def thunk():
+            counts[i] += 1
+            return f"value-{i}"
+        return thunk
+
+    plan = FreshenPlan([PlanEntry(f"r{i}", Action.FETCH, mk(i))
+                        for i in range(n_resources)])
+    stt = FreshenState(plan)
+    for op in schedule:
+        if op == "freshen":
+            stt.freshen()
+        else:
+            for i in range(n_resources):
+                assert stt.fr_fetch(i) == f"value-{i}"
+    # regardless of schedule: each executed at most... exactly once if touched
+    touched = any(op in ("fetch", "refetch", "freshen") for op in schedule)
+    if touched:
+        assert all(c == 1 for c in counts), counts
+
+
+@settings(max_examples=15, deadline=None)
+@given(freshen_delay_ms=st.integers(0, 20),
+       call_delay_ms=st.integers(0, 20),
+       run_freshen=st.booleans())
+def test_result_invariant_to_freshen_timing(freshen_delay_ms, call_delay_ms,
+                                            run_freshen):
+    """Figure 3: whatever the relative timing, λ's result is the same."""
+    def thunk():
+        time.sleep(freshen_delay_ms / 1000.0)
+        return 42
+
+    stt = FreshenState(FreshenPlan([PlanEntry("r", Action.FETCH, thunk)]))
+    if run_freshen:
+        th = threading.Thread(target=stt.freshen, daemon=True)
+        th.start()
+    time.sleep(call_delay_ms / 1000.0)
+    assert stt.fr_fetch(0) == 42
+    if run_freshen:
+        th.join()
+    # and afterwards the entry is FINISHED exactly once
+    s = stt.stats()
+    assert s["freshened"] + s["inline"] == 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(ttl=st.floats(0.1, 100.0), dt=st.floats(0.0, 200.0))
+def test_cache_never_returns_expired(ttl, dt):
+    now = [0.0]
+    c = FreshenCache(clock=lambda: now[0])
+    c.put("k", "old", ttl=ttl)
+    now[0] = dt
+    hit, val = c.get("k")
+    if dt > ttl:
+        assert not hit
+    else:
+        assert hit and val == "old"
+
+
+@settings(max_examples=20, deadline=None)
+@given(trace=st.lists(st.sampled_from("abc"), min_size=6, max_size=40))
+def test_markov_probabilities_form_distribution(trace):
+    m = MarkovPredictor(min_count=1)
+    for i, fn in enumerate(trace):
+        m.observe(fn, float(i))
+    for fn in "abc":
+        preds = m.successors(fn, top_k=10)
+        if preds:
+            total = sum(p.probability for p in preds)
+            assert 0 < total <= 1.0 + 1e-9
+            assert all(0 < p.probability <= 1 for p in preds)
+
+
+@settings(max_examples=20, deadline=None)
+@given(size_mb=st.floats(0.01, 50.0),
+       tier=st.sampled_from(["local", "edge", "remote"]))
+def test_warming_never_hurts(size_mb, tier):
+    nbytes = size_mb * 1024 * 1024
+    cold = Connection(TIERS[tier])
+    cold.establish()
+    t_cold = cold.transfer(nbytes)
+    warm = Connection(TIERS[tier])
+    warm.establish()
+    warm.warm()
+    t_warm = warm.transfer(nbytes)
+    assert t_warm <= t_cold + 1e-9
+
+
+@settings(max_examples=10, deadline=None)
+@given(a_mb=st.floats(0.01, 10.0), b_mb=st.floats(0.01, 10.0))
+def test_transfer_monotone_in_size(a_mb, b_mb):
+    lo, hi = sorted([a_mb, b_mb])
+    c1 = Connection(TIERS["edge"]); c1.establish()
+    c2 = Connection(TIERS["edge"]); c2.establish()
+    assert c1.transfer(lo * 2**20) <= c2.transfer(hi * 2**20) + 1e-9
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), toks=st.sampled_from([32, 64]))
+def test_moe_dispatch_paths_agree(seed, toks):
+    import dataclasses
+    from repro.configs import get_config
+    from repro.models.moe import init_moe, moe_apply
+    cfg = dataclasses.replace(get_config("granite-moe-1b-a400m").reduced(),
+                              dtype="float32")
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    p = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (2, toks, cfg.d_model),
+                          jnp.float32)
+    out_e, _ = moe_apply(p, x, cfg)
+    cfg_g = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, dispatch="gather"))
+    out_g, _ = moe_apply(p, x, cfg_g)
+    np.testing.assert_allclose(np.asarray(out_e), np.asarray(out_g),
+                               atol=1e-5, rtol=1e-5)

@@ -1,0 +1,140 @@
+"""End-to-end behaviour tests: the full platform (prediction -> scheduling ->
+freshen -> serving) and §3.3 inference driving a real JAX endpoint."""
+import dataclasses
+import tempfile
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import FunctionSpec, Runtime
+from repro.core.freshen import Action, FreshenPlan
+from repro.core.infer import TraceCollector, analyze_traces, build_plan
+from repro.models import make_model
+from repro.serving import (Executor, ModelEndpoint, ServingEngine,
+                           TieredDatastore, WeightStore)
+
+
+@pytest.fixture(scope="module")
+def platform():
+    cfg = get_config("qwen2-0.5b").reduced(d_model=128)
+    cfg = dataclasses.replace(cfg, vocab_size=256)
+    root = tempfile.mkdtemp(prefix="sys-")
+    store = WeightStore(root + "/w")
+    params = make_model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, store, params, root
+
+
+def test_markov_learned_chain_drives_freshen(platform):
+    """No explicit DAG: the platform LEARNS the chain from traces, then
+    freshens the successor."""
+    cfg, store, params, root = platform
+    eng = ServingEngine()
+    for name in ("fa", "fb"):
+        store.publish(name, params)
+        eng.deploy(ModelEndpoint(name, cfg, store, Executor(), batch_size=1,
+                                 seq_len=8))
+    toks = np.zeros((1, 8), np.int32)
+    # train the markov predictor: fa -> fb several times
+    for _ in range(4):
+        eng.invoke("fa", toks)
+        eng.invoke("fb", toks)
+        eng.scheduler.predictor.markov.reset_session()
+    preds = eng.scheduler.predictor.successors("fa")
+    assert preds and preds[0].fn == "fb" and preds[0].probability > 0.6
+
+
+def test_inferred_plan_runs_real_endpoint(platform):
+    """§3.3: trace the function twice, infer the freshen plan (constant-arg
+    resources only), attach it to the runtime, verify freshen hits."""
+    cfg, store, params, root = platform
+    store.publish("inferred", params)
+    ds = TieredDatastore(root + "/d", tier="local")
+    ds.put("lookup-table", {"t": 1})
+    ex = Executor()
+    ep = ModelEndpoint("inferred", cfg, store, ex, batch_size=1, seq_len=8)
+    col = TraceCollector()
+
+    def traced_fn(user):
+        col.record("get", "weights", ("creds", "inferred"))
+        col.record("get", "compiled", ("shapes", (1, 8)))
+        col.record("get", "lookup-table", ("creds", "lookup-table"))
+        col.record("put", "results", ("creds", user))     # varying arg!
+
+    traces = []
+    for user in ("u1", "u2"):
+        col.begin()
+        traced_fn(user)
+        traces.append(col.end())
+    inferred = analyze_traces(traces)
+    thunks = {"weights": ep._load_weights, "compiled": ep._compile,
+              "lookup-table": lambda: ds.get("lookup-table")[0]}
+    plan = build_plan(inferred, thunks)
+    names = [e.name for e in plan]
+    assert names == ["weights", "compiled", "lookup-table"]  # results excluded
+
+    rt = Runtime(FunctionSpec("inferred", ep.code,
+                              plan_factory=lambda r: plan, app="serving"))
+    rt.init()
+    rt.freshen(blocking=True)
+    assert rt.fr_state.stats()["freshened"] == 3
+    # λ then uses the freshened executable+weights (indices 0,1 match)
+    out = rt.run({"tokens": np.zeros((1, 8), np.int32)})
+    assert out["timing"]["compile"] < 0.05
+    assert np.isfinite(out["logits"]).all()
+
+
+def test_accuracy_gate_stops_freshen_storm(platform):
+    """Sustained mispredictions trip the accuracy gate (§3.3 billing)."""
+    cfg, store, params, root = platform
+    eng = ServingEngine()
+    eng.scheduler.accountant.disable_after = 3
+    eng.scheduler.accountant.horizon = 0.05
+    store.publish("fx", params)
+    store.publish("fy", params)
+    for name in ("fx", "fy"):
+        eng.deploy(ModelEndpoint(name, cfg, store, Executor(), batch_size=1,
+                                 seq_len=8))
+    eng.chain(["fx", "fy"])
+    toks = np.zeros((1, 8), np.int32)
+    # invoke fx repeatedly; fy never runs -> freshens expire as mispredictions
+    for _ in range(6):
+        eng.invoke("fx", toks)
+        # wait for the dispatched freshen (and its accounting) to land
+        eng.scheduler.runtimes["fy"].join_freshen(timeout=120)
+        time.sleep(0.15)                 # > misprediction horizon
+        eng.scheduler.accountant.sweep_expired("serving")
+    gated = [e for e in eng.scheduler.events if e.reason == "policy-gated"]
+    assert gated, "accuracy gate should eventually block freshen dispatch"
+    bill = eng.scheduler.accountant.bill("serving")
+    assert bill.mispredicted_freshens >= 3
+
+
+def test_paper_algorithm1_shape():
+    """The λ of Algorithm 1 runs with correct fr_state indexing end-to-end
+    (DataGet=0, DataPut=1) and inline fallback preserves the result."""
+    from repro.core.freshen import PlanEntry
+
+    log = []
+    plan_entries = lambda: FreshenPlan([
+        PlanEntry("DataGet", Action.FETCH, lambda: log.append("get") or 7),
+        PlanEntry("DataPut", Action.WARM, lambda: log.append("warm")),
+    ])
+
+    def lam(ctx, args):
+        data = ctx.fr_fetch(0)
+        result = data * args
+        ctx.fr_warm(1)
+        return result
+
+    rt = Runtime(FunctionSpec("lambda", lam,
+                              plan_factory=lambda r: plan_entries()))
+    rt.init()
+    assert rt.run(6) == 42                       # no freshen: inline
+    rt2 = Runtime(FunctionSpec("lambda", lam,
+                               plan_factory=lambda r: plan_entries()))
+    rt2.init()
+    rt2.freshen(blocking=True)
+    assert rt2.run(6) == 42                      # freshened: same result
