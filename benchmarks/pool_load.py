@@ -1,0 +1,164 @@
+"""Open-loop Poisson/burst load generator for the multi-instance pool
+platform: tail latency (p50/p95/p99), queueing delay, and cold-start /
+cold-path accounting with freshen ON vs OFF.
+
+Workload shape (per scenario): three bursts of Poisson arrivals separated
+by idle gaps longer than the pool keep-alive, so every burst starts from a
+scaled-to-zero pool — the regime where cold starts and un-freshened
+resources dominate the tail (cf. serverless cold-start benchmarking,
+arXiv 2101.09355, and SPES-style provisioning, arXiv 2403.17574).
+
+Scenarios:
+* ``single`` — one function whose chain graph has a self-edge, so every
+  invocation prewarm-freshens the pool's idle instances (and, via
+  ``prewarm_provision``, cold-starts extra instances off the critical
+  path) for the arrivals right behind it.
+* ``chain``  — a two-stage orchestration chain; invoking stage 1
+  freshens stage 2's pooled instances inside the trigger window.
+
+A *cold-path invocation* is one that paid a container cold start or
+executed a freshen-plan resource inline on the critical path; freshen-on
+must show fewer of them on this bursty workload.
+
+Run on CPU:  PYTHONPATH=src python benchmarks/pool_load.py
+(or through the harness: PYTHONPATH=src:. python benchmarks/run.py pool_load)
+"""
+import sys
+import time
+
+import numpy as np
+
+from repro.core import FreshenScheduler, FunctionSpec, PoolConfig, ServiceClass
+from repro.core.freshen import Action, FreshenPlan, PlanEntry
+
+FETCH_COST = 0.025      # seconds: the freshen-plan resource fetch
+COMPUTE_COST = 0.002    # seconds: the function body proper
+COLD_START = 0.020      # seconds: container/sandbox creation
+TTL = 0.30              # resource staleness horizon
+KEEP_ALIVE = 0.40       # idle seconds before an instance is reaped
+BURSTS = 3
+BURST_ARRIVALS = 22
+BURST_RATE = 110.0      # arrivals/second inside a burst (Poisson)
+GAP = 0.55              # idle seconds between bursts (> KEEP_ALIVE)
+
+
+def _spec(name: str, app: str) -> FunctionSpec:
+    def make_plan(rt):
+        def fetch():
+            time.sleep(FETCH_COST)
+            return {"resource": name}
+        return FreshenPlan([PlanEntry("data", Action.FETCH, fetch, ttl=TTL)])
+
+    def code(ctx, args):
+        data = ctx.fr_fetch(0)
+        time.sleep(COMPUTE_COST)
+        return data["resource"]
+
+    return FunctionSpec(name, code, plan_factory=make_plan, app=app)
+
+
+def _build(scenario: str, freshen_on: bool) -> FreshenScheduler:
+    cfg = PoolConfig(max_instances=8, keep_alive=KEEP_ALIVE,
+                     cold_start_cost=COLD_START,
+                     prewarm_provision=True, prewarm_fanout=2)
+    sched = FreshenScheduler(pool_config=cfg, max_router_threads=32)
+    sched.accountant.service_class["bench"] = ServiceClass.LATENCY_SENSITIVE
+    sched.accountant.disable_after = 10 ** 9     # policy out of the way
+    if scenario == "single":
+        sched.register(_spec("frontend", "bench"))
+        if freshen_on:
+            # self-edge: each arrival prewarm-freshens instances for the
+            # arrivals right behind it in the burst
+            sched.predictor.graph.add_edge("frontend", "frontend", 1.0, 0.01)
+    else:
+        sched.register(_spec("ingest", "bench"))
+        sched.register(_spec("transform", "bench"))
+        if freshen_on:
+            sched.predictor.graph.add_chain(["ingest", "transform"],
+                                            delay=COMPUTE_COST)
+    return sched
+
+
+def _arrival_times(rng: np.random.Generator) -> np.ndarray:
+    """Open-loop schedule: BURSTS Poisson bursts separated by GAP idle."""
+    times, t = [], 0.0
+    for _ in range(BURSTS):
+        gaps = rng.exponential(1.0 / BURST_RATE, size=BURST_ARRIVALS)
+        for g in gaps:
+            t += g
+            times.append(t)
+        t += GAP
+    return np.asarray(times)
+
+
+def _drive(scenario: str, freshen_on: bool, seed: int = 0) -> dict:
+    sched = _build(scenario, freshen_on)
+    times = _arrival_times(np.random.default_rng(seed))
+    t0 = time.monotonic()
+    futs = []
+    for at in times:
+        delay = t0 + at - time.monotonic()
+        if delay > 0:
+            time.sleep(delay)            # open loop: fire on schedule
+        if scenario == "single":
+            futs.append(sched.submit("frontend",
+                                     freshen_successors=freshen_on))
+        else:
+            futs.append(sched.submit_chain(["ingest", "transform"],
+                                           freshen=freshen_on))
+    for f in futs:
+        f.result(timeout=60)
+    wall = time.monotonic() - t0
+    summary = sched.accountant.latency_summary("bench")
+    inline = sum(p.freshen_stats()["inline"] for p in sched.pools.values())
+    hits = sum(p.freshen_stats()["hits"] for p in sched.pools.values())
+    provisioned = sum(p.stats()["prewarm_provisioned"]
+                      for p in sched.pools.values())
+    sched.shutdown()
+    summary.update(wall=wall, inline=inline, hits=hits,
+                   provisioned=provisioned,
+                   cold_path=summary["cold_starts"] + inline,
+                   requests=len(times))
+    return summary
+
+
+def _report(scenario: str, on: dict, off: dict):
+    # human-readable table goes to stderr: run.py's stdout is a CSV contract
+    out = sys.stderr
+    print(f"\n=== scenario: {scenario} "
+          f"({off['requests']} requests, {BURSTS} bursts) ===", file=out)
+    hdr = (f"{'':12s} {'p50':>8s} {'p95':>8s} {'p99':>8s} "
+           f"{'queue':>8s} {'cold':>5s} {'inline':>7s} {'coldpath':>9s}")
+    print(hdr, file=out)
+    for label, s in (("freshen OFF", off), ("freshen ON ", on)):
+        print(f"{label:12s} {s['p50']*1e3:7.1f}ms {s['p95']*1e3:7.1f}ms "
+              f"{s['p99']*1e3:7.1f}ms {s['mean_queue_delay']*1e3:7.2f}ms "
+              f"{s['cold_starts']:5d} {s['inline']:7d} {s['cold_path']:9d}",
+              file=out)
+    print(f"  freshen-on prewarm hits={on['hits']} "
+          f"provisioned={on['provisioned']} | "
+          f"cold-path reduction: {off['cold_path']} -> {on['cold_path']}",
+          file=out)
+
+
+def run():
+    """Harness entry (benchmarks/run.py): CSV rows name,us_per_call,derived."""
+    rows = []
+    for scenario in ("single", "chain"):
+        off = _drive(scenario, freshen_on=False)
+        on = _drive(scenario, freshen_on=True)
+        _report(scenario, on, off)
+        for label, s in (("off", off), ("on", on)):
+            rows.append((f"pool_load/{scenario}/freshen_{label}",
+                         f"{s['p95'] * 1e6:.0f}",
+                         f"p99us={s['p99']*1e6:.0f};"
+                         f"queue_us={s['mean_queue_delay']*1e6:.0f};"
+                         f"cold={s['cold_starts']};"
+                         f"cold_path={s['cold_path']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for row in run():
+        print(",".join(str(x) for x in row))

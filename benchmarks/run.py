@@ -6,13 +6,14 @@ import time
 
 def main() -> None:
     mods = []
-    from benchmarks import (chain_e2e, fig4_fetch, fig5_warming,
+    from benchmarks import (chain_e2e, fig4_fetch, fig5_warming, pool_load,
                             prediction_quality, roofline, table1_triggers)
     mods = [("table1_triggers", table1_triggers),
             ("fig4_fetch", fig4_fetch),
             ("fig5_warming", fig5_warming),
             ("chain_e2e", chain_e2e),
             ("prediction_quality", prediction_quality),
+            ("pool_load", pool_load),
             ("roofline", roofline)]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

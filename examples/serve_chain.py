@@ -7,7 +7,22 @@ The platform knows the chain (orchestration DAG), so invoking stage k
 freshens stage k+1 (weights, XLA executable, warmup) inside the trigger
 window.  Requests are batched by the Batcher.
 
-Run:  PYTHONPATH=src python examples/serve_chain.py [--requests 12]
+Platform architecture (see repro.core.pool / repro.core.scheduler): each
+deployed endpoint is backed by an InstancePool of warm containers — idle
+instances expire after a keep-alive (scale-to-zero), bursts scale the pool
+up to a cap (cold starts are charged to latency), and predicted-successor
+freshen is dispatched to *idle pooled instances*, so prewarming is a pool
+policy, not a per-runtime call.  ``ServingEngine.submit`` admits requests
+concurrently through the scheduler's thread-pool router; queueing delay,
+cold starts, and p50/p95/p99 latency land in the Accountant
+(``accountant.latency_summary(app)``).
+
+For the open-loop Poisson/burst tail-latency study of the pool itself
+(freshen on vs off, single function and chains), run:
+
+    PYTHONPATH=src python benchmarks/pool_load.py
+
+Run this example:  PYTHONPATH=src python examples/serve_chain.py [--requests 12]
 """
 import argparse
 import dataclasses
@@ -87,4 +102,14 @@ if __name__ == "__main__":
         st = eng.scheduler.accountant.bill("serving")
         print(f"  bill: fn={st.function_seconds:.2f}s "
               f"freshen={st.freshen_seconds:.2f}s "
-              f"useful={st.useful_freshens} mispred={st.mispredicted_freshens}")
+              f"useful={st.useful_freshens} mispred={st.mispredicted_freshens} "
+              f"cold_starts={st.cold_starts}")
+        lat = eng.scheduler.accountant.latency_summary("serving")
+        print(f"  latency: p50={lat['p50']*1e3:.1f}ms "
+              f"p95={lat['p95']*1e3:.1f}ms p99={lat['p99']*1e3:.1f}ms "
+              f"queue={lat['mean_queue_delay']*1e3:.2f}ms")
+        for name, ps in eng.platform_stats().items():
+            print(f"  pool[{name}]: instances={ps['instances']} "
+                  f"cold={ps['cold_starts']} hits={ps['hits']} "
+                  f"inline={ps['inline']}")
+        eng.scheduler.shutdown()

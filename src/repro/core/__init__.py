@@ -1,8 +1,11 @@
 """repro.core — the paper's contribution: the freshen primitive and its
 surrounding platform machinery (prediction, scheduling, accounting,
 inference, triggers).  Model-agnostic; binds to JAX via repro.serving."""
-from repro.core.accounting import Accountant, AppBill, ServiceClass  # noqa: F401
+from repro.core.accounting import (Accountant, AppBill, ServiceClass,  # noqa: F401
+                                   percentile)
 from repro.core.cache import FreshenCache  # noqa: F401
+from repro.core.pool import (InstancePool, InstanceState, PoolConfig,  # noqa: F401
+                             PooledInstance, PoolSaturated)
 from repro.core.freshen import (Action, FreshenPlan, FreshenState, FrState,  # noqa: F401
                                 PlanEntry)
 from repro.core.network import TIERS, Connection, Tier  # noqa: F401

@@ -9,14 +9,38 @@
   have been too inaccurate").
 * Service classes: aggressive freshen for latency-sensitive apps, disabled
   for latency-insensitive ones.
+* Latency accounting for the multi-instance platform: per-app end-to-end
+  latency samples (queueing delay + service time), queueing delay, and
+  cold-start counts, summarized as p50/p95/p99 via ``latency_summary`` —
+  the metrics the pool load benchmark reports.
 """
 from __future__ import annotations
 
+import math
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from enum import Enum
-from typing import Dict, Optional
+from typing import Dict, Optional, Sequence
+
+
+def _percentile_sorted(vals: Sequence[float], q: float) -> float:
+    """Linear-interpolated percentile over an ALREADY-SORTED sequence."""
+    if not vals:
+        return 0.0
+    k = (len(vals) - 1) * (q / 100.0)
+    lo = math.floor(k)
+    hi = math.ceil(k)
+    if lo == hi:
+        return vals[int(k)]
+    return vals[lo] * (hi - k) + vals[hi] * (k - lo)
+
+
+def percentile(values: Sequence[float], q: float) -> float:
+    """Linear-interpolated percentile (numpy-free; core stays dependency
+    light).  ``q`` in [0, 100]."""
+    return _percentile_sorted(sorted(values), q)
 
 
 class ServiceClass(Enum):
@@ -39,6 +63,8 @@ class AppBill:
     function_invocations: int = 0
     mispredicted_freshens: int = 0
     useful_freshens: int = 0
+    cold_starts: int = 0
+    queue_seconds: float = 0.0
 
     @property
     def freshen_overhead_ratio(self) -> float:
@@ -50,12 +76,18 @@ class Accountant:
     """Per-application ledger + the confidence gate."""
 
     def __init__(self, misprediction_horizon: float = 5.0,
-                 disable_after: int = 10, disable_miss_rate: float = 0.8):
+                 disable_after: int = 10, disable_miss_rate: float = 0.8,
+                 latency_window: int = 65536):
         self.horizon = misprediction_horizon
         self.disable_after = disable_after
         self.disable_miss_rate = disable_miss_rate
+        self.latency_window = latency_window
         self._bills: Dict[str, AppBill] = {}
         self._pending: Dict[str, list] = {}       # fn -> [freshen_ts, ...]
+        # bounded sliding windows (deque maxlen) so a long-running platform
+        # never accumulates unbounded per-invocation samples
+        self._latencies: Dict[str, deque] = {}           # app -> e2e seconds
+        self._queue_delays: Dict[str, deque] = {}        # app -> queue seconds
         self._lock = threading.Lock()
         self.service_class: Dict[str, ServiceClass] = {}
 
@@ -74,18 +106,50 @@ class Accountant:
             self._pending.setdefault(fn, []).append(now)
 
     def record_invocation(self, app: str, fn: str, seconds: float,
-                          now: Optional[float] = None):
+                          now: Optional[float] = None, *,
+                          queue_delay: float = 0.0, cold_start: bool = False):
+        """``seconds`` is billed service time; ``queue_delay`` is time the
+        invocation spent waiting for a pool instance.  End-to-end latency
+        (queue_delay + seconds) feeds the percentile summary."""
         now = time.monotonic() if now is None else now
         with self._lock:
             b = self._bills.setdefault(app, AppBill())
             b.function_seconds += seconds
             b.function_invocations += 1
+            b.queue_seconds += queue_delay
+            if cold_start:
+                b.cold_starts += 1
+            self._latencies.setdefault(
+                app, deque(maxlen=self.latency_window)).append(
+                    seconds + queue_delay)
+            self._queue_delays.setdefault(
+                app, deque(maxlen=self.latency_window)).append(queue_delay)
             pend = self._pending.get(fn, [])
             matched = [t for t in pend if now - t <= self.horizon]
             expired = [t for t in pend if now - t > self.horizon]
             b.useful_freshens += len(matched)
             b.mispredicted_freshens += len(expired)
             self._pending[fn] = []
+
+    def latency_summary(self, app: str) -> dict:
+        """p50/p95/p99 end-to-end latency, queueing delay, and cold starts
+        for one application — the tail-latency view of the platform, over
+        the last ``latency_window`` invocations."""
+        with self._lock:
+            lats = sorted(self._latencies.get(app, []))
+            qds = list(self._queue_delays.get(app, []))
+            b = self._bills.setdefault(app, AppBill())
+            cold = b.cold_starts
+        return {
+            "count": len(lats),
+            "p50": _percentile_sorted(lats, 50),
+            "p95": _percentile_sorted(lats, 95),
+            "p99": _percentile_sorted(lats, 99),
+            "max": lats[-1] if lats else 0.0,
+            "mean_queue_delay": sum(qds) / len(qds) if qds else 0.0,
+            "max_queue_delay": max(qds) if qds else 0.0,
+            "cold_starts": cold,
+        }
 
     def sweep_expired(self, app: str, now: Optional[float] = None):
         """Charge freshens whose function never arrived as mispredictions."""

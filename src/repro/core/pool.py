@@ -1,0 +1,346 @@
+"""Per-function instance pools — the multi-instance container model.
+
+The seed platform held exactly one ``Runtime`` (warm container) per
+function, so freshen could only be exercised one synchronous invocation at
+a time.  This module generalizes that into an OpenWhisk/SPES-style pool:
+
+* **Warm containers with keep-alive** — idle instances are retained for
+  ``PoolConfig.keep_alive`` seconds, then reaped (scale-to-zero).
+* **Queue-depth-driven scale-up** — when no idle instance exists and the
+  pool is below ``max_instances``, an arrival provisions a new (cold)
+  instance; ``scale_up_queue_depth`` throttles how eagerly.
+* **Configurable cold-start cost** — new instances pay
+  ``cold_start_cost`` seconds in their ``init`` hook, so cold-start
+  dynamics show up in measured latency exactly where they would on a real
+  platform.
+* **Prewarm-aware freshen dispatch** — ``prewarm_freshen`` routes the
+  paper's §3.1 freshen hook to *idle pooled instances* (and, with
+  ``prewarm_provision``, proactively cold-starts an instance off the
+  critical path when none is idle), unifying freshen with SPES-style
+  proactive provisioning: prewarming becomes a pool policy rather than a
+  per-runtime call.
+
+Idle instances are reused LIFO (most recently used first), so the
+instance an invocation lands on is the one most likely to have been
+freshened — that is what makes per-instance ``fr_state`` prewarming pay
+off under load.
+
+Thread-safety: all pool state is guarded by one condition variable;
+``acquire`` blocks (measuring queueing delay) when the pool is saturated.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.runtime import FunctionSpec, Runtime
+
+
+@dataclass
+class PoolConfig:
+    """Sizing and lifecycle policy for one function's instance pool."""
+    max_instances: int = 4
+    keep_alive: float = 30.0          # idle seconds before an instance is reaped
+    cold_start_cost: float = 0.0      # simulated sandbox-creation seconds
+    scale_up_queue_depth: int = 1     # waiters needed before scaling up (>=1)
+    prewarm_provision: bool = False   # cold-start a fresh instance for prewarm
+    prewarm_fanout: int = 1           # idle instances to freshen per dispatch
+    prewarm_busy_fallback: bool = True  # no idle instance: freshen a busy one
+                                        # (seed behavior — fr_state is
+                                        # thread-safe under the run hook)
+
+
+class InstanceState(Enum):
+    IDLE = "idle"
+    BUSY = "busy"
+    REAPED = "reaped"
+
+
+@dataclass
+class PooledInstance:
+    """One warm container slot: a Runtime plus pool-side lifecycle state."""
+    instance_id: int
+    runtime: Runtime
+    state: InstanceState = InstanceState.IDLE
+    created_at: float = 0.0
+    last_used: float = 0.0
+    invocations: int = 0
+
+
+class PoolSaturated(TimeoutError):
+    """acquire() timed out: every instance busy and the pool at its cap."""
+
+
+class InstancePool:
+    """All instances of one function, plus the scale/keep-alive policy."""
+
+    def __init__(self, spec: FunctionSpec, config: Optional[PoolConfig] = None,
+                 runtime_factory: Optional[Callable[[], Runtime]] = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 eager_instances: int = 0):
+        self.spec = spec
+        self.config = config or PoolConfig()
+        self.clock = clock
+        self._factory = runtime_factory or (
+            lambda: Runtime(spec, cold_start_cost=self.config.cold_start_cost,
+                            clock=clock))
+        self._cond = threading.Condition()
+        self._instances: Dict[int, PooledInstance] = {}
+        self._idle: List[PooledInstance] = []     # LIFO stack
+        self._next_id = 0
+        self._waiting = 0
+        # counters (read under the lock via stats())
+        self.cold_starts = 0          # acquires that landed on an uninit instance
+        self.warm_acquires = 0
+        self.queued_acquires = 0      # acquires that had to wait
+        self.reaped = 0
+        self.prewarm_dispatches = 0
+        self.prewarm_provisioned = 0
+        # lifetime fr_state counters of reaped instances, folded in by
+        # reap() so freshen_stats() is a lifetime view, not survivors-only
+        self._reaped_freshen_stats = {"freshened": 0, "inline": 0,
+                                      "waits": 0, "hits": 0}
+        with self._cond:
+            for _ in range(eager_instances):
+                self._create_locked()
+
+    # -- construction ---------------------------------------------------
+    def _create_locked(self) -> PooledInstance:
+        inst = PooledInstance(self._next_id, self._factory(),
+                              created_at=self.clock(), last_used=self.clock())
+        self._next_id += 1
+        self._instances[inst.instance_id] = inst
+        self._idle.append(inst)
+        return inst
+
+    def adopt(self, runtime: Runtime) -> PooledInstance:
+        """Install a caller-built Runtime as a pool instance (compat path)."""
+        with self._cond:
+            inst = PooledInstance(self._next_id, runtime,
+                                  created_at=self.clock(),
+                                  last_used=self.clock())
+            self._next_id += 1
+            self._instances[inst.instance_id] = inst
+            self._idle.append(inst)
+            self._cond.notify()
+            return inst
+
+    @property
+    def primary(self) -> Optional[Runtime]:
+        """The longest-lived live instance's runtime (single-instance view)."""
+        with self._cond:
+            if not self._instances:
+                return None
+            return self._instances[min(self._instances)].runtime
+
+    def ensure_primary(self) -> Runtime:
+        """Live single-instance view that survives scale-to-zero: provisions
+        a fresh instance when the pool is empty and cold-starts it so
+        seed-era callers that dereference ``fr_state`` directly always see
+        a live runtime (the original always-initialized contract)."""
+        with self._cond:
+            if not self._instances:
+                self._create_locked()
+                self._cond.notify()
+            rt = self._instances[min(self._instances)].runtime
+        if not rt.initialized:
+            # Idempotent and lock-guarded inside Runtime: concurrent callers
+            # block here until whoever got there first finishes the cold
+            # start, so no caller ever sees fr_state=None.
+            rt.init()
+        return rt
+
+    # -- sizing ---------------------------------------------------------
+    def size(self) -> int:
+        with self._cond:
+            return len(self._instances)
+
+    def idle_count(self) -> int:
+        with self._cond:
+            return len(self._idle)
+
+    # -- lifecycle ------------------------------------------------------
+    def reap(self, now: Optional[float] = None) -> int:
+        """Evict idle instances past keep-alive; returns how many died.
+        Repeated traffic gaps longer than ``keep_alive`` return the pool
+        all the way to zero (scale-to-zero)."""
+        now = self.clock() if now is None else now
+        dead: List[PooledInstance] = []
+        with self._cond:
+            keep: List[PooledInstance] = []
+            for inst in self._idle:
+                if now - inst.last_used > self.config.keep_alive \
+                        and not inst.runtime.freshen_in_flight():
+                    # an in-flight prewarm marks the instance as predicted
+                    # traffic: never reap out from under it
+                    dead.append(inst)
+                else:
+                    keep.append(inst)
+            self._idle = keep
+            for inst in dead:
+                inst.state = InstanceState.REAPED
+                del self._instances[inst.instance_id]
+                if inst.runtime.fr_state is not None:
+                    for k, v in inst.runtime.fr_state.stats().items():
+                        self._reaped_freshen_stats[k] += v
+            self.reaped += len(dead)
+        for inst in dead:
+            inst.runtime.join_freshen(timeout=0.0)
+        return len(dead)
+
+    def _pop_warmest_locked(self) -> PooledInstance:
+        """Warmth-aware LIFO: prefer the most recently used *initialized*
+        instance whose freshen is not mid-flight, so an arrival neither
+        lands on a still-booting provisioned instance nor blocks in FrWait
+        behind an in-progress prewarm while another warm container sits
+        idle.  (With a single idle instance there is no choice — waiting on
+        its in-flight freshen costs no more than doing the work inline.)"""
+        for i in range(len(self._idle) - 1, -1, -1):
+            rt = self._idle[i].runtime
+            if rt.initialized and not rt.freshen_in_flight():
+                return self._idle.pop(i)
+        for i in range(len(self._idle) - 1, -1, -1):
+            if self._idle[i].runtime.initialized:
+                return self._idle.pop(i)
+        return self._idle.pop()
+
+    def _scale_up_allowed_locked(self) -> bool:
+        """``_waiting`` includes the requester, so with the default depth of
+        1 any arrival that finds no idle instance provisions a new one."""
+        if len(self._instances) >= self.config.max_instances:
+            return False
+        if not self._instances:
+            return True                       # from zero: always start one
+        return self._waiting >= self.config.scale_up_queue_depth
+
+    def acquire(self, timeout: Optional[float] = None
+                ) -> Tuple[PooledInstance, float, bool]:
+        """Claim an instance for one invocation.
+
+        Returns ``(instance, queue_delay_seconds, cold_start)``.  Prefers
+        the most recently used idle instance (LIFO — the one a prewarm
+        freshen most likely touched); scales up when allowed; otherwise
+        blocks until a release, accumulating queueing delay."""
+        t0 = time.monotonic()
+        self.reap()
+        with self._cond:
+            waited = False
+            self._waiting += 1
+            try:
+                while True:
+                    if self._idle:
+                        inst = self._pop_warmest_locked()
+                        break
+                    if self._scale_up_allowed_locked():
+                        inst = self._create_locked()
+                        self._idle.remove(inst)
+                        break
+                    remaining = (None if timeout is None
+                                 else timeout - (time.monotonic() - t0))
+                    if remaining is not None and remaining <= 0:
+                        raise PoolSaturated(
+                            f"pool {self.spec.name!r} saturated "
+                            f"({len(self._instances)} instances, all busy)")
+                    waited = True
+                    self._cond.wait(remaining)
+            finally:
+                self._waiting -= 1
+            inst.state = InstanceState.BUSY
+            cold = not inst.runtime.initialized
+            if cold:
+                self.cold_starts += 1
+            else:
+                self.warm_acquires += 1
+            if waited:
+                self.queued_acquires += 1
+        return inst, time.monotonic() - t0, cold
+
+    def release(self, inst: PooledInstance):
+        with self._cond:
+            if inst.state is InstanceState.REAPED:
+                return
+            inst.state = InstanceState.IDLE
+            inst.last_used = self.clock()
+            inst.invocations += 1
+            self._idle.append(inst)
+            self._cond.notify()
+
+    # -- prewarm-aware freshen dispatch --------------------------------
+    def prewarm_freshen(self, max_dispatch: Optional[int] = None,
+                        provision: Optional[bool] = None
+                        ) -> List[threading.Thread]:
+        """Dispatch the freshen hook to idle pooled instances.
+
+        This is the platform half of §3.1 under multi-instance pooling:
+        the scheduler predicted this function will run soon, so freshen
+        the containers an arrival is most likely to land on (top of the
+        LIFO idle stack).  When nothing is idle: with ``provision`` on,
+        cold-start a brand-new instance *off the critical path* and
+        freshen it — SPES-style proactive provisioning; otherwise (by
+        default) fall back to freshening a busy instance's runtime, the
+        seed single-instance behavior — fr_state is thread-safe, so the
+        in-flight invocation is unaffected and the next one on that
+        instance hits.
+
+        Freshen is started while holding the pool lock, so ``reap`` (which
+        skips instances with an in-flight freshen) can never evict a
+        target between selection and dispatch."""
+        max_dispatch = (self.config.prewarm_fanout if max_dispatch is None
+                        else max_dispatch)
+        provision = (self.config.prewarm_provision if provision is None
+                     else provision)
+        self.reap()
+        threads: List[threading.Thread] = []
+        with self._cond:
+            targets = list(reversed(self._idle))[:max_dispatch]
+            if not targets and provision and \
+                    len(self._instances) < self.config.max_instances:
+                inst = self._create_locked()   # stays IDLE and acquirable
+                self.prewarm_provisioned += 1
+                self._cond.notify()
+                targets = [inst]
+            if not targets and self.config.prewarm_busy_fallback:
+                busy = [i for i in self._instances.values()
+                        if i.state is InstanceState.BUSY]
+                busy.sort(key=lambda i: i.last_used, reverse=True)
+                targets = busy[:max_dispatch]
+            self.prewarm_dispatches += len(targets)
+            now = self.clock()
+            for inst in targets:
+                # predicted traffic counts as activity: keep-alive must not
+                # evict an instance we just paid to warm before the
+                # predicted arrival lands
+                inst.last_used = now
+                th = inst.runtime.freshen(blocking=False)
+                if th is not None:
+                    threads.append(th)
+        return threads
+
+    # -- introspection --------------------------------------------------
+    def freshen_stats(self) -> dict:
+        """Lifetime fr_state counters: every live instance plus the folded
+        totals of instances already reaped."""
+        with self._cond:
+            agg = dict(self._reaped_freshen_stats)
+            runtimes = [i.runtime for i in self._instances.values()]
+        for rt in runtimes:
+            if rt.fr_state is not None:
+                for k, v in rt.fr_state.stats().items():
+                    agg[k] += v
+        return agg
+
+    def stats(self) -> dict:
+        with self._cond:
+            return {
+                "instances": len(self._instances),
+                "idle": len(self._idle),
+                "cold_starts": self.cold_starts,
+                "warm_acquires": self.warm_acquires,
+                "queued_acquires": self.queued_acquires,
+                "reaped": self.reaped,
+                "prewarm_dispatches": self.prewarm_dispatches,
+                "prewarm_provisioned": self.prewarm_provisioned,
+            }

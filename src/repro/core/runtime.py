@@ -9,6 +9,14 @@ hook loads the function code and starts the persistent runtime, and each
 Runtime-scoped state (``Runtime.scope``) survives across invocations within
 the container, exactly like runtime-scoped variables in the paper; the
 ``FreshenState`` and ``FreshenCache`` live there.
+
+A Runtime is one *instance*; multi-instance pooling (warm-container
+keep-alive, scale-to-zero, prewarm dispatch) lives in
+``repro.core.pool.InstancePool``.  Because pooled instances are touched
+concurrently (an invocation on the run hook while a prewarm freshen runs
+in its own thread), ``init`` is idempotent and guarded by a lock, and the
+non-blocking freshen hook performs initialization inside its background
+thread so a prewarm-provisioned cold start never blocks the dispatcher.
 """
 from __future__ import annotations
 
@@ -65,23 +73,30 @@ class Runtime:
         self.cold_start_cost = cold_start_cost
         self.fr_state: Optional[FreshenState] = None
         self._freshen_threads: list[threading.Thread] = []
+        self._threads_lock = threading.Lock()
+        self._init_lock = threading.Lock()
         self.init_seconds = 0.0
         self.run_count = 0
         self.freshen_count = 0
 
     # ------------------------------------------------------------------
     def init(self):
-        """The init hook: start runtime, load code, build the freshen plan."""
-        t0 = self.clock()
-        if self.cold_start_cost:
-            time.sleep(self.cold_start_cost)
-        if self.spec.init_fn:
-            self.spec.init_fn(self)
-        plan = (self.spec.plan_factory(self) if self.spec.plan_factory
-                else FreshenPlan([]))
-        self.fr_state = FreshenState(plan, clock=self.clock)
-        self.initialized = True
-        self.init_seconds = self.clock() - t0
+        """The init hook: start runtime, load code, build the freshen plan.
+        Idempotent and thread-safe — a pooled instance may be initialized
+        by whichever of run/freshen reaches it first."""
+        with self._init_lock:
+            if self.initialized:
+                return
+            t0 = self.clock()
+            if self.cold_start_cost:
+                time.sleep(self.cold_start_cost)
+            if self.spec.init_fn:
+                self.spec.init_fn(self)
+            plan = (self.spec.plan_factory(self) if self.spec.plan_factory
+                    else FreshenPlan([]))
+            self.fr_state = FreshenState(plan, clock=self.clock)
+            self.initialized = True
+            self.init_seconds = self.clock() - t0
 
     def _ensure_init(self):
         if not self.initialized:
@@ -90,11 +105,13 @@ class Runtime:
     # ------------------------------------------------------------------
     def freshen(self, blocking: bool = False) -> Optional[threading.Thread]:
         """The freshen hook (§3.1): run Algorithm 2 in a separate thread.
-        Receives no function arguments (abuse rule, §3.3)."""
-        self._ensure_init()
+        Receives no function arguments (abuse rule, §3.3).  In the
+        non-blocking case any pending cold start happens inside the
+        background thread, keeping prewarm dispatch off the critical path."""
         self.freshen_count += 1
 
         def _run():
+            self._ensure_init()
             self.fr_state.freshen()
 
         if blocking:
@@ -103,7 +120,8 @@ class Runtime:
         th = threading.Thread(target=_run, name=f"freshen-{self.spec.name}",
                               daemon=True)
         th.start()
-        self._freshen_threads.append(th)
+        with self._threads_lock:
+            self._freshen_threads.append(th)
         return th
 
     def run(self, args: Any = None) -> Any:
@@ -113,8 +131,18 @@ class Runtime:
         ctx = RunContext(self)
         return self.spec.code(ctx, args)
 
+    def freshen_in_flight(self) -> bool:
+        """True while a non-blocking freshen hook is still running."""
+        with self._threads_lock:
+            self._freshen_threads = [t for t in self._freshen_threads
+                                     if t.is_alive()]
+            return bool(self._freshen_threads)
+
     def join_freshen(self, timeout: Optional[float] = None):
-        for th in self._freshen_threads:
+        with self._threads_lock:
+            threads = list(self._freshen_threads)
+        for th in threads:
             th.join(timeout)
-        self._freshen_threads = [t for t in self._freshen_threads
-                                 if t.is_alive()]
+        with self._threads_lock:
+            self._freshen_threads = [t for t in self._freshen_threads
+                                     if t.is_alive()]

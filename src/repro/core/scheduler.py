@@ -1,16 +1,38 @@
-"""The platform-side freshen scheduler (§2, §3.3): on every function
-invocation, predict the successors and dispatch ``freshen`` to their
-runtimes inside the trigger-delay window — gated by the Accountant's
-confidence/service-class/accuracy policy.
+"""The platform-side freshen scheduler (§2, §3.3) as a concurrent,
+multi-instance router.
+
+On every function invocation the scheduler predicts the successors and
+dispatches ``freshen`` inside the trigger-delay window — gated by the
+Accountant's confidence/service-class/accuracy policy.  Unlike the seed
+(one synchronous ``Runtime`` per function), each registered function is
+backed by an ``InstancePool`` (repro.core.pool):
+
+* ``invoke``  — acquire an instance (possibly cold-starting or queueing),
+  run, release; queueing delay and cold starts are reported to the
+  Accountant alongside service time.
+* ``submit`` / ``submit_chain`` — admit invocations concurrently through a
+  thread-pool router; returns a Future.
+* freshen dispatch targets *idle pooled instances* (prewarm-aware): the
+  §3.1 hook becomes a pool policy, and with ``PoolConfig.prewarm_provision``
+  it proactively cold-starts an instance off the critical path —
+  SPES-style provisioning unified with the paper's prediction machinery.
+
+Backwards-compatible single-instance view: ``register`` still returns a
+Runtime (the pool's primary instance) and ``self.runtimes`` still maps
+function name -> that runtime, so code written against the seed API keeps
+working unchanged.
 """
 from __future__ import annotations
 
 import threading
 import time
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from collections import deque
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass, field, replace
+from typing import Callable, Deque, Dict, List, Optional
 
 from repro.core.accounting import Accountant
+from repro.core.pool import InstancePool, PoolConfig
 from repro.core.prediction import HybridPredictor, Prediction
 from repro.core.runtime import FunctionSpec, Runtime
 
@@ -24,57 +46,124 @@ class FreshenEvent:
     at: float = field(default_factory=time.monotonic)
 
 
+class _PrimaryRuntimeView:
+    """Seed-compat ``scheduler.runtimes`` mapping: fn -> the pool's live
+    primary runtime.  Resolved per access (never a snapshot), so a primary
+    reaped by keep-alive expiry is transparently replaced by the pool's
+    next (or a freshly provisioned) instance."""
+
+    def __init__(self, pools: Dict[str, InstancePool]):
+        self._pools = pools
+
+    def __getitem__(self, fn: str) -> Runtime:
+        return self._pools[fn].ensure_primary()
+
+    def get(self, fn: str, default=None):
+        pool = self._pools.get(fn)
+        return default if pool is None else pool.ensure_primary()
+
+    def __contains__(self, fn: str) -> bool:
+        return fn in self._pools
+
+    def __iter__(self):
+        return iter(self._pools)
+
+    def keys(self):
+        return self._pools.keys()
+
+    def __len__(self):
+        return len(self._pools)
+
+
 class FreshenScheduler:
-    """Global scheduling entity: runtimes + predictor + policy."""
+    """Global scheduling entity: instance pools + predictor + policy."""
 
     def __init__(self, predictor: Optional[HybridPredictor] = None,
-                 accountant: Optional[Accountant] = None):
+                 accountant: Optional[Accountant] = None,
+                 pool_config: Optional[PoolConfig] = None,
+                 max_router_threads: int = 16,
+                 event_window: int = 4096):
         self.predictor = predictor or HybridPredictor()
         self.accountant = accountant or Accountant()
-        self.runtimes: Dict[str, Runtime] = {}
-        self.events: List[FreshenEvent] = []
+        self.pool_config = pool_config or PoolConfig()
+        self.max_router_threads = max_router_threads
+        self.pools: Dict[str, InstancePool] = {}
+        self.runtimes = _PrimaryRuntimeView(self.pools)
+        # bounded: a long-running platform appends events per invocation
+        self.events: Deque[FreshenEvent] = deque(maxlen=event_window)
         self._scopes: Dict[str, tuple] = {}      # chain-level shared scopes
         self._lock = threading.Lock()
+        self._router: Optional[ThreadPoolExecutor] = None
 
     # ------------------------------------------------------------------
     def register(self, spec: FunctionSpec, runtime: Optional[Runtime] = None,
-                 scope_group: Optional[str] = None):
-        """``scope_group``: §6 "different isolation scopes" — functions in
+                 scope_group: Optional[str] = None,
+                 config: Optional[PoolConfig] = None) -> Runtime:
+        """Create the function's instance pool (with one eager instance so
+        the seed-era single-runtime API keeps working) and return its
+        primary runtime.
+
+        ``scope_group``: §6 "different isolation scopes" — functions in
         the same group share runtime-scoped state (Azure-style chain-level
         isolation): one ``scope`` dict and one ``FreshenCache``, so a
         resource freshened for any member is visible to all of them.
-        Each member keeps its own fr_state (plans differ per function)."""
-        rt = runtime or Runtime(spec)
+        Every instance the pool ever creates joins the shared scope; each
+        keeps its own fr_state (plans differ per function)."""
+        # each pool gets its own config copy: tuning one pool must never
+        # mutate another's policy through the shared scheduler default
+        cfg = config or replace(self.pool_config)
+
+        def factory() -> Runtime:
+            rt = Runtime(spec, cold_start_cost=cfg.cold_start_cost)
+            self._join_scope(rt, scope_group)
+            return rt
+
+        pool = InstancePool(spec, cfg, runtime_factory=factory)
+        if runtime is not None:
+            self._join_scope(runtime, scope_group)
+            pool.adopt(runtime)
+        else:
+            pool.adopt(factory())
         with self._lock:
-            if scope_group is not None:
-                shared = self._scopes.setdefault(
-                    scope_group, (rt.scope, rt.cache))
-                rt.scope, rt.cache = shared
-            self.runtimes[spec.name] = rt
-        return rt
+            self.pools[spec.name] = pool
+        return pool.primary
+
+    def _join_scope(self, rt: Runtime, scope_group: Optional[str]):
+        if scope_group is None:
+            return
+        with self._lock:
+            shared = self._scopes.setdefault(scope_group, (rt.scope, rt.cache))
+            rt.scope, rt.cache = shared
 
     def runtime(self, fn: str) -> Runtime:
         return self.runtimes[fn]
 
+    def pool(self, fn: str) -> InstancePool:
+        return self.pools[fn]
+
     # ------------------------------------------------------------------
     def _dispatch_freshen(self, pred: Prediction):
-        rt = self.runtimes.get(pred.fn)
-        if rt is None:
+        pool = self.pools.get(pred.fn)
+        if pool is None:
             self.events.append(FreshenEvent(pred.fn, pred.probability, False,
                                             "no-runtime"))
             return
-        app = rt.spec.app
+        app = pool.spec.app
         if not self.accountant.should_freshen(app, pred.probability):
             self.events.append(FreshenEvent(pred.fn, pred.probability, False,
                                             "policy-gated"))
             return
         t0 = time.monotonic()
-        th = rt.freshen(blocking=False)
+        threads = pool.prewarm_freshen()
+        if not threads:
+            self.events.append(FreshenEvent(pred.fn, pred.probability, False,
+                                            "no-idle-instance"))
+            return
         self.events.append(FreshenEvent(pred.fn, pred.probability, True,
                                         "dispatched"))
 
         def _account():
-            if th is not None:
+            for th in threads:
                 th.join()
             self.accountant.record_freshen(app, pred.fn,
                                            time.monotonic() - t0)
@@ -89,15 +178,26 @@ class FreshenScheduler:
             self._dispatch_freshen(pred)
 
     # ------------------------------------------------------------------
-    def invoke(self, fn: str, args=None, freshen_successors: bool = True):
-        """Run fn through its runtime with full bookkeeping."""
-        rt = self.runtimes[fn]
+    def invoke(self, fn: str, args=None, freshen_successors: bool = True,
+               acquire_timeout: Optional[float] = None):
+        """Run fn on a pooled instance with full bookkeeping: predecessor
+        prediction, instance acquisition (cold start / queueing), service
+        timing, and latency accounting."""
+        pool = self.pools[fn]
         if freshen_successors:
             self.on_invocation_start(fn)
+        inst, queue_delay, cold = pool.acquire(timeout=acquire_timeout)
         t0 = time.monotonic()
-        result = rt.run(args)
-        self.accountant.record_invocation(rt.spec.app, fn,
-                                          time.monotonic() - t0)
+        try:
+            result = inst.runtime.run(args)
+        finally:
+            pool.release(inst)
+        # accounting only on success (seed semantics): a raising function
+        # body must not be billed, skew latency percentiles, or credit
+        # pending freshens as useful
+        self.accountant.record_invocation(
+            pool.spec.app, fn, time.monotonic() - t0,
+            queue_delay=queue_delay, cold_start=cold)
         return result
 
     def run_chain(self, fns: List[str], args=None,
@@ -107,3 +207,37 @@ class FreshenScheduler:
         for fn in fns:
             out = self.invoke(fn, out, freshen_successors=freshen)
         return out
+
+    # ------------------------------------------------------------------
+    # The thread-pool router: concurrent admission.
+    def _ensure_router(self) -> ThreadPoolExecutor:
+        with self._lock:
+            if self._router is None:
+                self._router = ThreadPoolExecutor(
+                    max_workers=self.max_router_threads,
+                    thread_name_prefix="freshen-router")
+            return self._router
+
+    def submit(self, fn: str, args=None, freshen_successors: bool = True,
+               acquire_timeout: Optional[float] = None) -> Future:
+        """Admit one invocation concurrently; returns a Future for the
+        function result.  Concurrency beyond the pool cap queues inside
+        ``InstancePool.acquire`` and is charged as queueing delay."""
+        return self._ensure_router().submit(
+            self.invoke, fn, args, freshen_successors, acquire_timeout)
+
+    def submit_chain(self, fns: List[str], args=None,
+                     freshen: bool = True) -> Future:
+        return self._ensure_router().submit(self.run_chain, fns, args, freshen)
+
+    def shutdown(self, wait: bool = True):
+        with self._lock:
+            router, self._router = self._router, None
+        if router is not None:
+            router.shutdown(wait=wait)
+
+    # ------------------------------------------------------------------
+    def platform_stats(self) -> dict:
+        """Pool + freshen counters across every registered function."""
+        return {name: {**pool.stats(), **pool.freshen_stats()}
+                for name, pool in self.pools.items()}

@@ -20,10 +20,18 @@ class Request:
     submitted_at: float = field(default_factory=time.monotonic)
 
 
+_CLOSE = object()       # sentinel: wakes the worker immediately on close()
+
+
 class Batcher:
     """Groups requests into batches of ``batch_size``; flushes on fullness or
-    ``max_wait`` seconds.  ``handler(payloads: list) -> list`` runs on the
-    worker thread."""
+    ``max_wait`` seconds after the *first* request of a partial batch.
+    ``handler(payloads: list) -> list`` runs on the worker thread.
+
+    ``close()`` is graceful: a sentinel wakes the worker, every request
+    already queued is flushed through the handler (no caller is ever left
+    hanging on a Future), and only then does the worker exit.  Requests
+    submitted after close raise ``RuntimeError``."""
 
     def __init__(self, batch_size: int, handler: Callable[[List[Any]], List[Any]],
                  max_wait: float = 0.01):
@@ -32,6 +40,7 @@ class Batcher:
         self.max_wait = max_wait
         self._q: queue.Queue = queue.Queue()
         self._stop = False
+        self._lifecycle = threading.Lock()   # makes submit-vs-close atomic
         self.batches_processed = 0
         self.requests_processed = 0
         self.batch_fill: List[int] = []
@@ -39,43 +48,103 @@ class Batcher:
         self._th.start()
 
     def submit(self, payload: Any) -> Future:
-        req = Request(payload)
-        self._q.put(req)
+        # check+put under the lifecycle lock: a submit can never slip its
+        # request into the queue after close() has finished draining
+        with self._lifecycle:
+            if self._stop:
+                raise RuntimeError("Batcher is closed")
+            req = Request(payload)
+            self._q.put(req)
         return req.future
 
-    def _loop(self):
-        while not self._stop:
-            batch: List[Request] = []
-            deadline = None
-            while len(batch) < self.batch_size:
-                timeout = 0.05 if deadline is None else max(
-                    0.0, deadline - time.monotonic())
-                try:
-                    req = self._q.get(timeout=timeout)
-                except queue.Empty:
-                    if batch:
-                        break
-                    continue
-                batch.append(req)
-                if deadline is None:
-                    deadline = time.monotonic() + self.max_wait
-            if not batch:
-                continue
-            try:
-                results = self.handler([r.payload for r in batch])
-                for r, res in zip(batch, results):
+    def _flush(self, batch: List[Request]):
+        if not batch:
+            return
+        try:
+            results = self.handler([r.payload for r in batch])
+            if len(results) != len(batch):
+                raise RuntimeError(
+                    f"handler returned {len(results)} results for "
+                    f"{len(batch)} requests")
+            for r, res in zip(batch, results):
+                if not r.future.done():      # caller may have cancelled
                     r.future.set_result(res)
-            except BaseException as exc:
-                for r in batch:
-                    if not r.future.done():
-                        r.future.set_exception(exc)
-            self.batches_processed += 1
-            self.requests_processed += len(batch)
-            self.batch_fill.append(len(batch))
+        except BaseException as exc:
+            for r in batch:
+                if not r.future.done():
+                    r.future.set_exception(exc)
+        self.batches_processed += 1
+        self.requests_processed += len(batch)
+        self.batch_fill.append(len(batch))
 
-    def close(self):
-        self._stop = True
-        self._th.join(timeout=1.0)
+    def _loop(self):
+        closing = False
+        while not closing:
+            try:
+                first = self._q.get(timeout=0.1)
+            except queue.Empty:
+                if self._stop:
+                    break
+                continue
+            if first is _CLOSE:
+                break
+            # Partial-batch deadline: starts at the FIRST request and is
+            # honored exactly — a batch never waits longer than max_wait,
+            # even when requests keep trickling in.
+            batch: List[Request] = [first]
+            deadline = time.monotonic() + self.max_wait
+            while len(batch) < self.batch_size:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    break
+                try:
+                    req = self._q.get(timeout=remaining)
+                except queue.Empty:
+                    break
+                if req is _CLOSE:
+                    closing = True
+                    break
+                batch.append(req)
+            self._flush(batch)
+        # Drain: flush everything that was queued before (or raced with)
+        # close so no submitted Future is ever dropped.
+        tail: List[Request] = []
+        while True:
+            try:
+                req = self._q.get_nowait()
+            except queue.Empty:
+                break
+            if req is _CLOSE:
+                continue
+            tail.append(req)
+            if len(tail) == self.batch_size:
+                self._flush(tail)
+                tail = []
+        self._flush(tail)
+
+    def close(self, timeout: float = 5.0):
+        with self._lifecycle:
+            if self._stop:
+                return
+            self._stop = True
+        self._q.put(_CLOSE)
+        self._th.join(timeout=timeout)
+        if self._th.is_alive():
+            # Worker is merely slow (long handler): it will still drain the
+            # queue itself; failing stragglers here would race its drain
+            # loop and break the no-dropped-request guarantee.
+            return
+        # Worker is dead: fail any stragglers rather than hang their
+        # callers forever.
+        while True:
+            try:
+                req = self._q.get_nowait()
+            except queue.Empty:
+                break
+            if req is _CLOSE:
+                continue
+            if not req.future.done():
+                req.future.set_exception(RuntimeError("Batcher closed"))
 
     def stats(self):
         fills = self.batch_fill or [0]

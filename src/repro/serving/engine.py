@@ -217,17 +217,30 @@ class ModelEndpoint:
 
 
 class ServingEngine:
-    """A pool of endpoints behind a FreshenScheduler — the 'serverless
-    platform' of the evaluation."""
+    """Model endpoints behind a FreshenScheduler — the 'serverless
+    platform' of the evaluation.
+
+    Each deployed endpoint is backed by an ``InstancePool``
+    (repro.core.pool): concurrent requests admitted via ``submit`` fan out
+    across warm instances, scale the pool up under queue pressure, and are
+    prewarmed by predicted-successor freshen dispatch.  ``deploy`` eagerly
+    initializes the primary instance (the seed-era warm container);
+    additional instances cold-start on demand."""
 
     def __init__(self, scheduler=None):
         from repro.core.scheduler import FreshenScheduler
         self.scheduler = scheduler or FreshenScheduler()
         self.endpoints: Dict[str, ModelEndpoint] = {}
 
-    def deploy(self, ep: ModelEndpoint) -> Runtime:
+    def deploy(self, ep: ModelEndpoint, pool_config=None) -> Runtime:
         self.endpoints[ep.name] = ep
-        rt = self.scheduler.register(ep.spec())
+        if pool_config is None:
+            # model endpoints hold multi-second XLA compiles and weight
+            # loads: a generic 30s keep-alive would reap them between
+            # pipeline stages, so serving defaults to a long retention
+            from repro.core.pool import PoolConfig
+            pool_config = PoolConfig(keep_alive=600.0)
+        rt = self.scheduler.register(ep.spec(), config=pool_config)
         rt.init()
         return rt
 
@@ -235,5 +248,14 @@ class ServingEngine:
         return self.scheduler.invoke(
             name, {"tokens": tokens}, freshen_successors=freshen_successors)
 
+    def submit(self, name: str, tokens, freshen_successors: bool = True):
+        """Concurrent admission through the scheduler's router; returns a
+        Future for the endpoint result."""
+        return self.scheduler.submit(
+            name, {"tokens": tokens}, freshen_successors=freshen_successors)
+
     def chain(self, names: List[str], delay: float = 0.06):
         self.scheduler.predictor.graph.add_chain(names, delay=delay)
+
+    def platform_stats(self) -> Dict[str, dict]:
+        return self.scheduler.platform_stats()

@@ -1,0 +1,139 @@
+"""FreshenState under contention — the invariants multi-instance pooling
+leans on (a pooled instance can run its freshen hook concurrently with an
+invocation's wrappers at any time).
+
+Each racy case is parametrized 3x so a flake shows up as a hard failure in
+one run; assertions go through ``stats()`` counters so the observable
+contract (not implementation internals) is what is pinned down.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.core.freshen import (Action, FreshenPlan, FreshenState, FrState,
+                                PlanEntry)
+
+
+def _plan(counter, value="v", ttl=None, delay=0.0, fail_flag=None):
+    def thunk():
+        if fail_flag is not None and fail_flag["fail"]:
+            counter["fails"] = counter.get("fails", 0) + 1
+            raise RuntimeError("transient freshen failure")
+        if delay:
+            time.sleep(delay)
+        counter["n"] += 1
+        return value
+    return FreshenPlan([PlanEntry("r0", Action.FETCH, thunk, ttl=ttl)])
+
+
+@pytest.mark.parametrize("rep", range(3))
+def test_concurrent_fetches_race_freshen_thread(rep):
+    """16 fr_fetch callers race the freshen hook: exactly one execution,
+    every caller sees the value, and the counters add up."""
+    c = {"n": 0}
+    st = FreshenState(_plan(c, delay=0.02))
+    results = []
+    barrier = threading.Barrier(17)
+
+    def fetch():
+        barrier.wait()
+        results.append(st.fr_fetch(0))
+
+    def hook():
+        barrier.wait()
+        st.freshen()
+
+    threads = [threading.Thread(target=fetch) for _ in range(16)]
+    threads.append(threading.Thread(target=hook))
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30)
+    assert c["n"] == 1
+    assert results == ["v"] * 16
+    s = st.stats()
+    assert s["freshened"] + s["inline"] == 1        # exactly one executor
+    # every fetch either consumed a FINISHED result or did the work itself
+    assert s["hits"] + s["inline"] == 16
+
+
+@pytest.mark.parametrize("rep", range(3))
+def test_ttl_stale_reclaim_under_race(rep):
+    """After TTL expiry, racing fetchers reclaim the stale entry exactly
+    once — no thundering herd of refetches."""
+    c = {"n": 0}
+    now = [0.0]
+    st = FreshenState(_plan(c, ttl=1.0), clock=lambda: now[0])
+    st.freshen()
+    assert c["n"] == 1 and st.stats()["freshened"] == 1
+    now[0] = 5.0                                     # entry is now stale
+    results = []
+    barrier = threading.Barrier(8)
+
+    def fetch():
+        barrier.wait()
+        results.append(st.fr_fetch(0))
+
+    threads = [threading.Thread(target=fetch) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30)
+    assert results == ["v"] * 8
+    assert c["n"] == 2                               # exactly one refetch
+    assert st.stats()["inline"] == 1
+
+
+@pytest.mark.parametrize("rep", range(3))
+def test_invalidate_while_running_keeps_inflight_result(rep):
+    """invalidate() must not clobber a RUNNING entry: the in-flight freshen
+    completes and its result is consumable; a later invalidate then forces
+    inline re-execution."""
+    c = {"n": 0}
+    st = FreshenState(_plan(c, delay=0.1))
+    th = threading.Thread(target=st.freshen, daemon=True)
+    th.start()
+    deadline = time.monotonic() + 5.0
+    while st.entries[0].state is not FrState.RUNNING:
+        assert time.monotonic() < deadline, "freshen never started"
+        time.sleep(0.001)
+    st.invalidate(0)                                 # racing the hook
+    assert st.entries[0].state is FrState.RUNNING    # skipped, not clobbered
+    th.join(timeout=30)
+    assert st.fr_fetch(0) == "v"
+    assert c["n"] == 1 and st.stats()["hits"] == 1
+    st.invalidate(0)                                 # now it lands
+    assert st.entries[0].state is FrState.IDLE
+    assert st.fr_fetch(0) == "v"
+    assert c["n"] == 2 and st.stats()["inline"] == 1
+
+
+@pytest.mark.parametrize("rep", range(3))
+def test_inline_fallback_after_failing_freshen_thunk(rep):
+    """A freshen thunk that raises leaves the entry reclaimable; concurrent
+    wrappers then fall back inline without ever seeing the failure."""
+    c = {"n": 0}
+    flag = {"fail": True}
+    st = FreshenState(_plan(c, fail_flag=flag))
+    hook_stats = st.freshen()                        # thunk raises inside
+    assert hook_stats["failed"] == 1 and hook_stats["done"] == 0
+    assert st.entries[0].state is FrState.IDLE       # reclaimable
+    assert st.stats()["freshened"] == 0
+    flag["fail"] = False
+    results = []
+    barrier = threading.Barrier(6)
+
+    def fetch():
+        barrier.wait()
+        results.append(st.fr_fetch(0))
+
+    threads = [threading.Thread(target=fetch) for _ in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30)
+    assert results == ["v"] * 6
+    assert c["n"] == 1                               # inline exactly once
+    s = st.stats()
+    assert s["inline"] == 1 and s["hits"] == 5

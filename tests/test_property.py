@@ -17,7 +17,11 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional test dependency (see requirements-test.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.cache import FreshenCache
 from repro.core.freshen import Action, FreshenPlan, FreshenState, PlanEntry
