@@ -20,6 +20,12 @@ A *cold-path invocation* is one that paid a container cold start or
 executed a freshen-plan resource inline on the critical path; freshen-on
 must show fewer of them on this bursty workload.
 
+CSV rows (stdout, via benchmarks/run.py — full schema in
+docs/benchmarks.md): ``name`` is ``pool_load/<scenario>/freshen_<on|off>``,
+``us_per_call`` is p95 end-to-end latency in microseconds, and ``derived``
+packs ``p99us`` / ``queue_us`` / ``cold`` / ``cold_path``.  The
+human-readable comparison table goes to stderr.
+
 Run on CPU:  PYTHONPATH=src python benchmarks/pool_load.py
 (or through the harness: PYTHONPATH=src:. python benchmarks/run.py pool_load)
 """

@@ -72,15 +72,18 @@ def run_pipeline(eng, stages, requests, freshen_on):
                 for s in stages}
     rng = np.random.default_rng(0)
     t0 = time.monotonic()
-    for i in range(requests):
-        x = rng.integers(0, 512, size=(SEQ,), dtype=np.int32)
-        for s in stages:
-            fut = batchers[s].submit(x)
-            logits = fut.result(timeout=300)
-            x = np.argsort(logits[-1])[-SEQ:].astype(np.int32)  # feed forward
-    wall = time.monotonic() - t0
-    for b in batchers.values():
-        b.close()
+    try:
+        for i in range(requests):
+            x = rng.integers(0, 512, size=(SEQ,), dtype=np.int32)
+            for s in stages:
+                fut = batchers[s].submit(x)
+                logits = fut.result(timeout=300)
+                x = np.argsort(logits[-1])[-SEQ:].astype(np.int32)  # feed fwd
+        wall = time.monotonic() - t0
+    finally:
+        # a failing request must not leak flush-timer threads
+        for b in batchers.values():
+            b.close()
     return lat, wall
 
 
@@ -91,25 +94,30 @@ if __name__ == "__main__":
 
     for mode in (False, True):
         eng, stages = build(freshen_on=mode)
-        lat, wall = run_pipeline(eng, stages, args.requests, mode)
-        label = "freshen ON " if mode else "freshen OFF"
-        print(f"=== {label}: {args.requests} requests, wall {wall:.2f}s ===")
-        for s in stages:
-            arr = np.array(lat[s]) * 1e3
-            print(f"  {s:16s} first={arr[0]:8.1f}ms  "
-                  f"p50={np.percentile(arr,50):7.1f}ms  "
-                  f"max={arr.max():8.1f}ms  ({len(arr)} batches)")
-        st = eng.scheduler.accountant.bill("serving")
-        print(f"  bill: fn={st.function_seconds:.2f}s "
-              f"freshen={st.freshen_seconds:.2f}s "
-              f"useful={st.useful_freshens} mispred={st.mispredicted_freshens} "
-              f"cold_starts={st.cold_starts}")
-        lat = eng.scheduler.accountant.latency_summary("serving")
-        print(f"  latency: p50={lat['p50']*1e3:.1f}ms "
-              f"p95={lat['p95']*1e3:.1f}ms p99={lat['p99']*1e3:.1f}ms "
-              f"queue={lat['mean_queue_delay']*1e3:.2f}ms")
-        for name, ps in eng.platform_stats().items():
-            print(f"  pool[{name}]: instances={ps['instances']} "
-                  f"cold={ps['cold_starts']} hits={ps['hits']} "
-                  f"inline={ps['inline']}")
-        eng.scheduler.shutdown()
+        try:
+            lat, wall = run_pipeline(eng, stages, args.requests, mode)
+            label = "freshen ON " if mode else "freshen OFF"
+            print(f"=== {label}: {args.requests} requests, "
+                  f"wall {wall:.2f}s ===")
+            for s in stages:
+                arr = np.array(lat[s]) * 1e3
+                print(f"  {s:16s} first={arr[0]:8.1f}ms  "
+                      f"p50={np.percentile(arr,50):7.1f}ms  "
+                      f"max={arr.max():8.1f}ms  ({len(arr)} batches)")
+            st = eng.scheduler.accountant.bill("serving")
+            print(f"  bill: fn={st.function_seconds:.2f}s "
+                  f"freshen={st.freshen_seconds:.2f}s "
+                  f"useful={st.useful_freshens} "
+                  f"mispred={st.mispredicted_freshens} "
+                  f"cold_starts={st.cold_starts}")
+            lat = eng.scheduler.accountant.latency_summary("serving")
+            print(f"  latency: p50={lat['p50']*1e3:.1f}ms "
+                  f"p95={lat['p95']*1e3:.1f}ms p99={lat['p99']*1e3:.1f}ms "
+                  f"queue={lat['mean_queue_delay']*1e3:.2f}ms")
+            for name, ps in eng.platform_stats().items():
+                print(f"  pool[{name}]: instances={ps['instances']} "
+                      f"cold={ps['cold_starts']} hits={ps['hits']} "
+                      f"inline={ps['inline']}")
+        finally:
+            # router/worker threads must die even when the demo fails
+            eng.close()

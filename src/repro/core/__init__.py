@@ -10,6 +10,7 @@ from repro.core.freshen import (Action, FreshenPlan, FreshenState, FrState,  # n
                                 PlanEntry)
 from repro.core.network import TIERS, Connection, Tier  # noqa: F401
 from repro.core.prediction import (ChainGraph, HybridPredictor,  # noqa: F401
-                                   MarkovPredictor, Prediction)
+                                   MarkovPredictor, Prediction,
+                                   RecurrencePredictor)
 from repro.core.runtime import FunctionSpec, RunContext, Runtime  # noqa: F401
 from repro.core.scheduler import FreshenScheduler  # noqa: F401

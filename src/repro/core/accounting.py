@@ -97,13 +97,20 @@ class Accountant:
 
     # ------------------------------------------------------------------
     def record_freshen(self, app: str, fn: str, seconds: float,
-                       now: Optional[float] = None):
+                       now: Optional[float] = None, *,
+                       expected_delay: float = 0.0):
+        """``expected_delay`` is the predictor's estimate of when the
+        freshened function will run (e.g. a recurrence period).  The
+        pending freshen is anchored at that expected arrival, so a
+        60s-period timer prewarm is not charged as a misprediction just
+        because the misprediction horizon is 5s — it expires only
+        ``horizon`` seconds after the *predicted* arrival time."""
         now = time.monotonic() if now is None else now
         with self._lock:
             b = self._bills.setdefault(app, AppBill())
             b.freshen_seconds += seconds
             b.freshen_invocations += 1
-            self._pending.setdefault(fn, []).append(now)
+            self._pending.setdefault(fn, []).append(now + expected_delay)
 
     def record_invocation(self, app: str, fn: str, seconds: float,
                           now: Optional[float] = None, *,
@@ -140,6 +147,7 @@ class Accountant:
             qds = list(self._queue_delays.get(app, []))
             b = self._bills.setdefault(app, AppBill())
             cold = b.cold_starts
+            invocations = b.function_invocations
         return {
             "count": len(lats),
             "p50": _percentile_sorted(lats, 50),
@@ -149,6 +157,9 @@ class Accountant:
             "mean_queue_delay": sum(qds) / len(qds) if qds else 0.0,
             "max_queue_delay": max(qds) if qds else 0.0,
             "cold_starts": cold,
+            # lifetime cold starts over lifetime invocations — the signal
+            # HistoryPolicy.adapt trades against retention cost
+            "cold_start_rate": cold / invocations if invocations else 0.0,
         }
 
     def sweep_expired(self, app: str, now: Optional[float] = None):

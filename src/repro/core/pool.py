@@ -32,7 +32,7 @@ from __future__ import annotations
 
 import threading
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, fields, replace
 from enum import Enum
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -267,6 +267,22 @@ class InstancePool:
             inst.invocations += 1
             self._idle.append(inst)
             self._cond.notify()
+
+    def reconfigure(self, config: PoolConfig) -> PoolConfig:
+        """Swap the pool's sizing/lifecycle policy live; returns the old
+        config (a copy).  Fields are copied *into* the existing config
+        object so every closure holding a reference (the default runtime
+        factory, scheduler-registered factories) sees the new values —
+        this is how a trace-learned ``HistoryPolicy`` retunes a running
+        pool.  Waiters are woken: a raised ``max_instances`` lets a queued
+        acquire scale up immediately; a lowered cap or keep-alive takes
+        effect at the next reap (busy instances are never force-killed)."""
+        with self._cond:
+            old = replace(self.config)
+            for f in fields(PoolConfig):
+                setattr(self.config, f.name, getattr(config, f.name))
+            self._cond.notify_all()
+        return old
 
     # -- prewarm-aware freshen dispatch --------------------------------
     def prewarm_freshen(self, max_dispatch: Optional[int] = None,

@@ -1,7 +1,7 @@
 """Prediction of impending function invocations (§2, "Regaining efficiency
 via prediction").
 
-Two predictors, matching the paper's two sources of opportunity:
+Three predictors, matching the paper's sources of opportunity:
 
 * ``ChainGraph``    — explicit chains from orchestration frameworks
                       (AWS Step Functions-style DAGs with edge probabilities).
@@ -9,15 +9,22 @@ Two predictors, matching the paper's two sources of opportunity:
                       derived via tracing or service mesh techniques [6]"),
                       a first-order Markov model with Laplace smoothing and
                       count-based confidence.
+* ``RecurrencePredictor`` — a function's *own* next invocation, from its
+                      inter-arrival history (the timer-trigger periodicity
+                      that dominates real serverless traces; cf. the
+                      histogram keep-alive policies of Serverless-in-the-
+                      Wild-style systems).  Confidence comes from
+                      regularity: tight inter-arrival distributions predict
+                      strongly, erratic ones barely at all.
 
-Both answer: given that ``fn`` was just invoked (or is starting), which
+All answer: given that ``fn`` was just invoked (or is starting), which
 functions will run next, with what probability, and how much time do we have
 (the trigger-service delay window, Table 1)?
 """
 from __future__ import annotations
 
 import threading
-from collections import defaultdict
+from collections import defaultdict, deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -116,19 +123,86 @@ class MarkovPredictor:
             return preds[:top_k]
 
 
+class RecurrencePredictor:
+    """Predicts a function's own next invocation from inter-arrival history.
+
+    Where ``MarkovPredictor`` learns *which other* function follows,
+    this learns *when the same* function recurs — the signal behind
+    history-adaptive keep-alive and self-prewarm timing.  Probability is a
+    regularity score ``1 / (1 + cv)`` (cv = coefficient of variation of the
+    inter-arrival gaps): a strict timer scores ~1.0, Poisson traffic ~0.5,
+    and heavy-tailed arrivals near 0.  No prediction is emitted until
+    ``min_samples`` gaps are seen, or when the median gap exceeds
+    ``horizon`` (a prewarm that far ahead would only be reaped again).
+    """
+
+    def __init__(self, min_samples: int = 3, max_samples: int = 512,
+                 horizon: float = 300.0):
+        self.min_samples = min_samples
+        self.max_samples = max_samples
+        self.horizon = horizon
+        self._gaps: Dict[str, deque] = {}
+        self._last: Dict[str, float] = {}
+        self._lock = threading.Lock()
+
+    def observe(self, fn: str, timestamp: float):
+        with self._lock:
+            last = self._last.get(fn)
+            if last is not None and timestamp >= last:
+                self._gaps.setdefault(
+                    fn, deque(maxlen=self.max_samples)).append(
+                        timestamp - last)
+            self._last[fn] = timestamp
+
+    def seed(self, fn: str, interarrivals: Sequence[float]):
+        """Bulk-load gaps from an offline trace (HistoryPolicy's path)."""
+        with self._lock:
+            gaps = self._gaps.setdefault(fn, deque(maxlen=self.max_samples))
+            gaps.extend(g for g in interarrivals if g >= 0)
+
+    def interarrivals(self, fn: str) -> List[float]:
+        with self._lock:
+            return list(self._gaps.get(fn, ()))
+
+    def predict(self, fn: str) -> Optional[Prediction]:
+        with self._lock:
+            gaps = list(self._gaps.get(fn, ()))
+        if len(gaps) < self.min_samples:
+            return None
+        median = sorted(gaps)[len(gaps) // 2]
+        if median <= 0 or median > self.horizon:
+            return None
+        mean = sum(gaps) / len(gaps)
+        var = sum((g - mean) ** 2 for g in gaps) / len(gaps)
+        cv = (var ** 0.5) / mean if mean > 0 else 0.0
+        return Prediction(fn, 1.0 / (1.0 + cv), median)
+
+
 class HybridPredictor:
-    """Explicit chain knowledge when available, learned model otherwise."""
+    """Explicit chain knowledge when available, learned models otherwise.
+
+    Chain successors come from ``graph`` (falling back to ``markov``);
+    when a ``recurrence`` predictor is attached, the function's own next
+    invocation is appended (unless a self-edge already predicted it) —
+    so one ``successors`` call yields both chain prewarms and
+    periodicity-driven self-prewarms."""
 
     def __init__(self, graph: Optional[ChainGraph] = None,
-                 markov: Optional[MarkovPredictor] = None):
+                 markov: Optional[MarkovPredictor] = None,
+                 recurrence: Optional[RecurrencePredictor] = None):
         self.graph = graph or ChainGraph()
         self.markov = markov or MarkovPredictor()
+        self.recurrence = recurrence
 
     def observe(self, fn: str, timestamp: float):
         self.markov.observe(fn, timestamp)
+        if self.recurrence is not None:
+            self.recurrence.observe(fn, timestamp)
 
     def successors(self, fn: str) -> List[Prediction]:
-        explicit = self.graph.successors(fn)
-        if explicit:
-            return explicit
-        return self.markov.successors(fn)
+        preds = self.graph.successors(fn) or self.markov.successors(fn)
+        if self.recurrence is not None:
+            rec = self.recurrence.predict(fn)
+            if rec is not None and all(p.fn != fn for p in preds):
+                preds = preds + [rec]
+        return preds

@@ -141,6 +141,11 @@ class FreshenScheduler:
     def pool(self, fn: str) -> InstancePool:
         return self.pools[fn]
 
+    def apply_pool_config(self, fn: str, config: PoolConfig) -> PoolConfig:
+        """Live-retune one function's pool (the trace/history-adaptive
+        control loop's write path); returns the previous config."""
+        return self.pools[fn].reconfigure(config)
+
     # ------------------------------------------------------------------
     def _dispatch_freshen(self, pred: Prediction):
         pool = self.pools.get(pred.fn)
@@ -165,8 +170,9 @@ class FreshenScheduler:
         def _account():
             for th in threads:
                 th.join()
-            self.accountant.record_freshen(app, pred.fn,
-                                           time.monotonic() - t0)
+            self.accountant.record_freshen(
+                app, pred.fn, time.monotonic() - t0,
+                expected_delay=pred.expected_delay)
 
         threading.Thread(target=_account, daemon=True).start()
 

@@ -237,9 +237,11 @@ class ServingEngine:
         if pool_config is None:
             # model endpoints hold multi-second XLA compiles and weight
             # loads: a generic 30s keep-alive would reap them between
-            # pipeline stages, so serving defaults to a long retention
-            from repro.core.pool import PoolConfig
-            pool_config = PoolConfig(keep_alive=600.0)
+            # pipeline stages, so serving defaults to a long retention —
+            # on top of the scheduler-wide pool policy, not replacing it
+            import dataclasses
+            pool_config = dataclasses.replace(self.scheduler.pool_config,
+                                              keep_alive=600.0)
         rt = self.scheduler.register(ep.spec(), config=pool_config)
         rt.init()
         return rt
@@ -256,6 +258,32 @@ class ServingEngine:
 
     def chain(self, names: List[str], delay: float = 0.06):
         self.scheduler.predictor.graph.add_chain(names, delay=delay)
+
+    def adopt_trace_policy(self, policy, time_scale: float = 1.0
+                           ) -> Dict[str, object]:
+        """Apply a trace-learned ``repro.workloads.HistoryPolicy`` to the
+        deployed endpoints: each pool whose endpoint name appears in the
+        policy's history is live-reconfigured (keep-alive from the observed
+        idle-time distribution, max_instances from Little's law), and the
+        policy's inter-arrival histograms seed recurrence prediction so
+        periodic endpoints self-prewarm.  Returns ``{name: PoolConfig}``
+        for the pools that were retuned."""
+        applied = {}
+        for name in policy.functions:
+            pool = self.scheduler.pools.get(name)
+            if pool is None:
+                continue
+            cfg = policy.pool_config(name, base=pool.config,
+                                     time_scale=time_scale)
+            self.scheduler.apply_pool_config(name, cfg)
+            applied[name] = cfg
+        policy.prime(self.scheduler.predictor, time_scale=time_scale)
+        return applied
+
+    def close(self, wait: bool = True):
+        """Shut the scheduler's router down (idempotent); demos and tests
+        should call this in a finally block so worker threads never leak."""
+        self.scheduler.shutdown(wait=wait)
 
     def platform_stats(self) -> Dict[str, dict]:
         return self.scheduler.platform_stats()

@@ -1,0 +1,179 @@
+"""HistoryPolicy — from observed invocation history to pool policy.
+
+This is the closed loop the ROADMAP names (SPES-style performance–resource
+trade-off): per-function inter-arrival histograms, learned from a trace
+(``fit``) or online (``observe``), drive
+
+* **prewarm timing** — ``prime`` seeds a ``RecurrencePredictor`` so the
+  scheduler's successor prediction includes "this function recurs every
+  ~T seconds" and freshens its own pool ahead of the next arrival, and
+* **pool sizing** — ``pool_config`` derives keep-alive from the
+  inter-arrival (= idle time between recurrences) distribution and
+  ``max_instances`` from Little's law over the busiest minute, and
+* **runtime adaptation** — ``adapt`` widens keep-alive / instance caps
+  when ``Accountant.latency_summary`` still reports cold starts above the
+  target rate (prediction missed; pay for retention instead).
+
+Invariants (enforced, tested): keep-alive is never below the pool's
+cold-start cost (reaping faster than you can boot guarantees thrash) and
+``max_instances`` is always >= 1.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+from typing import Dict, List, Optional
+
+from repro.core.accounting import percentile
+from repro.core.pool import PoolConfig
+from repro.core.prediction import HybridPredictor, RecurrencePredictor
+
+from repro.workloads.trace import Trace
+
+
+@dataclass
+class _FnHistory:
+    interarrivals: List[float]
+    peak_per_minute: int = 0
+    duration: float = 0.0          # representative service seconds (p95-ish)
+    invocations: int = 0
+
+
+class HistoryPolicy:
+    """Inter-arrival histograms -> recurrence prediction + PoolConfig."""
+
+    def __init__(self, keep_alive_percentile: float = 95.0,
+                 keep_alive_margin: float = 1.25,
+                 keep_alive_cap: float = 600.0,
+                 max_instances_cap: int = 64,
+                 target_cold_start_rate: float = 0.05,
+                 min_adapt_samples: int = 20):
+        self.keep_alive_percentile = keep_alive_percentile
+        self.keep_alive_margin = keep_alive_margin
+        self.keep_alive_cap = keep_alive_cap
+        self.max_instances_cap = max_instances_cap
+        self.target_cold_start_rate = target_cold_start_rate
+        self.min_adapt_samples = min_adapt_samples
+        self._hist: Dict[str, _FnHistory] = {}
+        self._last_seen: Dict[str, float] = {}
+
+    # -- learning -------------------------------------------------------
+    def fit(self, trace: Trace) -> "HistoryPolicy":
+        """Learn per-function histograms in one pass over the trace.
+        (One pass matters: a real Azure trace slice has thousands of
+        functions — per-function rescans would be quadratic.)"""
+        per_min: Dict[str, Dict[int, int]] = {}
+        durs: Dict[str, List[float]] = {}
+        arrivals: Dict[str, List[float]] = {}
+        for ev in trace.events():               # already time-sorted
+            per_min.setdefault(ev.fn, {})
+            minute = int(ev.t // 60.0)
+            per_min[ev.fn][minute] = per_min[ev.fn].get(minute, 0) + 1
+            durs.setdefault(ev.fn, []).append(ev.duration)
+            arrivals.setdefault(ev.fn, []).append(ev.t)
+        for fn in trace.functions:
+            ts = arrivals.get(fn, [])
+            gaps = [b - a for a, b in zip(ts, ts[1:])]
+            prof = trace.profiles.get(fn)
+            duration = max(
+                prof.duration_p95 if prof else 0.0,
+                percentile(durs.get(fn, []), 95) if durs.get(fn) else 0.0)
+            self._hist[fn] = _FnHistory(
+                interarrivals=gaps,
+                peak_per_minute=max(per_min.get(fn, {0: 0}).values()),
+                duration=duration,
+                invocations=len(durs.get(fn, [])))
+        return self
+
+    def observe(self, fn: str, timestamp: float):
+        """Online learning: record one arrival (monotone timestamps).
+
+        Deliberately parallel to ``RecurrencePredictor.observe`` rather
+        than delegating to it: the predictor keeps a bounded recent
+        window (prediction follows drift), while policy percentiles and
+        Little's law want the full history."""
+        h = self._hist.setdefault(fn, _FnHistory(interarrivals=[]))
+        last = self._last_seen.get(fn)
+        if last is not None and timestamp >= last:
+            h.interarrivals.append(timestamp - last)
+        self._last_seen[fn] = timestamp
+        h.invocations += 1
+
+    # -- views ----------------------------------------------------------
+    @property
+    def functions(self) -> List[str]:
+        return sorted(self._hist)
+
+    def interarrivals(self, fn: str) -> List[float]:
+        h = self._hist.get(fn)
+        return list(h.interarrivals) if h else []
+
+    # -- policy outputs -------------------------------------------------
+    def pool_config(self, fn: str, base: Optional[PoolConfig] = None,
+                    time_scale: float = 1.0) -> PoolConfig:
+        """Derive a PoolConfig for ``fn`` from its history.
+
+        ``time_scale`` converts trace seconds to wall seconds (match the
+        replayer's scale).  Keep-alive covers the ``keep_alive_percentile``
+        of observed idle gaps (times ``keep_alive_margin``) so recurrences
+        land on warm instances; functions with <2 observed invocations
+        keep the base keep-alive (no histogram to trust).  ``max_instances``
+        is Little's law over the busiest minute: peak arrival rate x
+        service time, floored at 1.
+        """
+        base = base or PoolConfig()
+        h = self._hist.get(fn)
+        keep_alive = base.keep_alive
+        if h and h.interarrivals:
+            keep_alive = (percentile(h.interarrivals,
+                                     self.keep_alive_percentile)
+                          * self.keep_alive_margin * time_scale)
+        keep_alive = min(keep_alive, self.keep_alive_cap)
+        # never reap faster than the pool can boot: below cold-start cost,
+        # keep-alive buys nothing and guarantees cold-start thrash
+        keep_alive = max(keep_alive, base.cold_start_cost)
+        max_instances = 1
+        if h and h.peak_per_minute:
+            # Little's law in wall time: compressing the trace clock
+            # raises the wall arrival rate (rate / time_scale) but the
+            # replayed function bodies still take their real duration,
+            # so required concurrency grows as the clock compresses
+            wall_rate = (h.peak_per_minute / 60.0) / time_scale
+            concurrency = wall_rate * h.duration
+            max_instances = max(1, math.ceil(concurrency))
+        max_instances = min(max_instances, self.max_instances_cap)
+        return replace(base, keep_alive=keep_alive,
+                       max_instances=max_instances)
+
+    def prime(self, predictor: HybridPredictor,
+              time_scale: float = 1.0) -> RecurrencePredictor:
+        """Attach (or reuse) a RecurrencePredictor on ``predictor`` and
+        seed it with every function's scaled inter-arrival history, so the
+        scheduler self-prewarms periodic functions from the first replayed
+        invocation instead of re-learning the period online."""
+        rec = predictor.recurrence
+        if rec is None:
+            rec = RecurrencePredictor()
+            predictor.recurrence = rec
+        for fn, h in self._hist.items():
+            if h.interarrivals:
+                rec.seed(fn, [g * time_scale for g in h.interarrivals])
+        return rec
+
+    def adapt(self, fn: str, summary: dict,
+              config: PoolConfig) -> PoolConfig:
+        """Close the loop from ``Accountant.latency_summary`` output: if
+        cold starts still exceed ``target_cold_start_rate`` after enough
+        invocations, double keep-alive (capped) and add one instance of
+        headroom — prediction under-covered, so buy retention instead."""
+        if summary.get("count", 0) < self.min_adapt_samples:
+            return config
+        rate = summary.get("cold_start_rate", 0.0)
+        if rate <= self.target_cold_start_rate:
+            return config
+        keep_alive = max(min(config.keep_alive * 2.0, self.keep_alive_cap),
+                         config.cold_start_cost)
+        max_instances = max(1, min(config.max_instances + 1,
+                                   self.max_instances_cap))
+        return replace(config, keep_alive=keep_alive,
+                       max_instances=max_instances)

@@ -1,0 +1,332 @@
+"""repro.workloads: trace loading/generation edge cases, HistoryPolicy
+config bounds, recurrence prediction, live pool reconfiguration, and
+open-loop replay through the scheduler.
+
+Pure-core tests (no JAX): traces are tiny and time scales are small so the
+replay cases finish in tens of milliseconds.
+"""
+import time
+
+import pytest
+
+from repro.core import (FreshenScheduler, FunctionSpec, HybridPredictor,
+                        InstancePool, PoolConfig, RecurrencePredictor,
+                        ServiceClass)
+from repro.serving.engine import ServingEngine
+from repro.workloads import (HistoryPolicy, InvocationEvent, Trace,
+                             TraceReplayer)
+
+APP = "app"
+
+
+def _noop_spec(name, app=APP):
+    return FunctionSpec(name, lambda ctx, args: args, app=app)
+
+
+def _sched(**cfg_kwargs):
+    sched = FreshenScheduler(pool_config=PoolConfig(**cfg_kwargs))
+    sched.accountant.service_class[APP] = ServiceClass.LATENCY_SENSITIVE
+    return sched
+
+
+# ----------------------------------------------------------------------
+# Azure trace format loading
+def _write_azure(tmp_path):
+    inv = tmp_path / "invocations.csv"
+    inv.write_text(
+        "HashOwner,HashApp,HashFunction,Trigger,1,2,3\n"
+        "o1,a1,fn-periodic,timer,2,2,2\n"
+        "o1,a1,fn-once,http,1,0,\n"          # blank bucket cell == 0
+        "o1,a1,fn-zero,queue,0,0,0\n")       # never invoked
+    dur = tmp_path / "durations.csv"
+    dur.write_text(
+        "HashOwner,HashApp,HashFunction,Average,percentile_Average_50,"
+        "percentile_Average_95\n"
+        "o1,a1,fn-periodic,120,100,400\n"    # milliseconds
+        "o1,a1,fn-once,0,0,0\n"              # zero-duration row is legal
+        "o1,a1,fn-zero,50,50,50\n")
+    return str(inv), str(dur)
+
+
+def test_azure_loader_counts_durations_and_bucket_expansion(tmp_path):
+    inv, dur = _write_azure(tmp_path)
+    tr = Trace.from_azure_csv(inv, dur)
+    assert tr.profiles["fn-periodic"].counts == [2, 2, 2]
+    assert tr.profiles["fn-periodic"].duration_p50 == pytest.approx(0.1)
+    assert tr.profiles["fn-periodic"].duration_p95 == pytest.approx(0.4)
+    assert tr.profiles["fn-once"].invocations == 1
+    # bucket expansion: 2 per minute -> events evenly inside each minute
+    ts = [e.t for e in tr.events() if e.fn == "fn-periodic"]
+    assert len(ts) == 6 and ts == sorted(ts)
+    assert 0.0 <= ts[0] < 60.0 and 120.0 <= ts[-1] < 180.0
+    # zero-count function produces no events but keeps its profile
+    assert all(e.fn != "fn-zero" for e in tr.events())
+    assert "fn-zero" in tr.profiles
+
+
+def test_azure_loader_zero_duration_rows_yield_zero_cost_events(tmp_path):
+    inv, dur = _write_azure(tmp_path)
+    tr = Trace.from_azure_csv(inv, dur)
+    once = [e for e in tr.events() if e.fn == "fn-once"]
+    assert len(once) == 1 and once[0].duration == 0.0
+
+
+# ----------------------------------------------------------------------
+# Trace edge cases
+def test_empty_trace_is_valid_everywhere():
+    tr = Trace([])
+    assert len(tr) == 0 and tr.duration == 0.0 and tr.functions == []
+    policy = HistoryPolicy().fit(tr)
+    assert policy.functions == []
+    sched = _sched()
+    report = TraceReplayer(sched, tr, time_scale=0.01).run()
+    sched.shutdown()
+    assert report.requests == 0 and report.errors == 0
+
+
+def test_out_of_order_timestamps_are_sorted():
+    tr = Trace([InvocationEvent("f", 3.0), InvocationEvent("f", 1.0),
+                InvocationEvent("f", 2.0)])
+    assert [e.t for e in tr.events()] == [1.0, 2.0, 3.0]
+    assert tr.interarrivals("f") == [1.0, 1.0]
+
+
+def test_single_invocation_function_has_no_histogram_but_sane_config():
+    tr = Trace([InvocationEvent("lonely", 5.0)])
+    policy = HistoryPolicy().fit(tr)
+    assert policy.interarrivals("lonely") == []
+    base = PoolConfig(keep_alive=7.5, cold_start_cost=0.5)
+    cfg = policy.pool_config("lonely", base=base)
+    assert cfg.keep_alive == 7.5          # no histogram: keep the base
+    assert cfg.max_instances >= 1
+
+
+def test_trace_scaled_scales_timestamps_and_durations():
+    tr = Trace.periodic("f", period=2.0, invocations=3, duration=0.5)
+    tr.profiles["f"].duration_p50 = 0.5
+    tr.profiles["f"].duration_p95 = 1.0
+    sc = tr.scaled(0.1)
+    assert [e.t for e in sc.events()] == pytest.approx([0.0, 0.2, 0.4])
+    assert sc.events()[0].duration == pytest.approx(0.05)
+    # profile percentiles scale too, and the copies are independent
+    assert sc.profiles["f"].duration_p95 == pytest.approx(0.1)
+    sc.profiles["f"].duration_p50 = 99.0
+    assert tr.profiles["f"].duration_p50 == 0.5
+
+
+def test_synthetic_archetypes_shapes():
+    per = Trace.periodic("p", period=1.5, invocations=4)
+    assert per.interarrivals("p") == pytest.approx([1.5, 1.5, 1.5])
+    bur = Trace.bursty("b", bursts=2, burst_size=3, gap=10.0, rate=100.0)
+    gaps = bur.interarrivals("b")
+    assert len(gaps) == 5 and max(gaps) > 10.0      # the inter-burst gap
+    rare = Trace.rare("r", invocations=2, horizon=300.0)
+    assert len(rare) == 2 and rare.duration <= 300.0
+
+
+# ----------------------------------------------------------------------
+# HistoryPolicy bounds
+def test_keep_alive_never_below_cold_start_cost():
+    # gaps of 10ms but a 2s cold start: reaping faster than boot thrashes
+    tr = Trace.periodic("f", period=0.01, invocations=10)
+    cfg = HistoryPolicy().fit(tr).pool_config(
+        "f", base=PoolConfig(cold_start_cost=2.0))
+    assert cfg.keep_alive >= 2.0
+
+
+def test_keep_alive_capped_and_max_instances_bounded():
+    tr = Trace.periodic("f", period=10_000.0, invocations=5)
+    policy = HistoryPolicy(keep_alive_cap=600.0)
+    cfg = policy.fit(tr).pool_config("f", base=PoolConfig())
+    assert cfg.keep_alive == 600.0
+    assert 1 <= cfg.max_instances <= policy.max_instances_cap
+
+
+def test_max_instances_from_littles_law():
+    # 120/minute at 1.5s service time -> ~3 concurrent instances
+    evs = [InvocationEvent("hot", i * 0.5, duration=1.5) for i in range(120)]
+    policy = HistoryPolicy().fit(Trace(evs))
+    assert policy.pool_config("hot").max_instances == 3
+    # compressed replay: the clock shrinks 10x but the replayed bodies
+    # still take their real 1.5s, so required concurrency grows 10x
+    assert policy.pool_config("hot", time_scale=0.1).max_instances == 30
+
+
+def test_adapt_widens_on_high_cold_start_rate_only():
+    policy = HistoryPolicy(target_cold_start_rate=0.05, min_adapt_samples=10)
+    cfg = PoolConfig(keep_alive=1.0, max_instances=2, cold_start_cost=0.1)
+    hot = {"count": 50, "cold_start_rate": 0.4}
+    widened = policy.adapt("f", hot, cfg)
+    assert widened.keep_alive == 2.0 and widened.max_instances == 3
+    assert policy.adapt("f", {"count": 50, "cold_start_rate": 0.0}, cfg) is cfg
+    assert policy.adapt("f", {"count": 3, "cold_start_rate": 1.0}, cfg) is cfg
+
+
+# ----------------------------------------------------------------------
+# Recurrence prediction
+def test_recurrence_predictor_periodic_confidence():
+    rec = RecurrencePredictor()
+    rec.seed("tick", [1.0] * 10)
+    pred = rec.predict("tick")
+    assert pred is not None and pred.fn == "tick"
+    assert pred.expected_delay == pytest.approx(1.0)
+    assert pred.probability > 0.9          # strict timer: near-certain
+    assert rec.predict("unknown") is None
+
+
+def test_recurrence_predictor_needs_samples_and_respects_horizon():
+    rec = RecurrencePredictor(min_samples=3, horizon=100.0)
+    rec.seed("f", [1.0, 1.0])
+    assert rec.predict("f") is None        # below min_samples
+    rec.seed("g", [500.0] * 5)
+    assert rec.predict("g") is None        # median beyond horizon
+
+
+def test_hybrid_predictor_merges_recurrence_without_duplicating_self_edge():
+    hyb = HybridPredictor(recurrence=RecurrencePredictor())
+    hyb.recurrence.seed("f", [1.0] * 5)
+    preds = hyb.successors("f")
+    assert [p.fn for p in preds] == ["f"]
+    hyb.graph.add_edge("f", "f", 1.0, 0.5)     # explicit self-edge wins
+    preds = hyb.successors("f")
+    assert len([p for p in preds if p.fn == "f"]) == 1
+    assert preds[0].expected_delay == 0.5
+
+
+def test_history_policy_prime_seeds_recurrence_scaled():
+    tr = Trace.periodic("tick", period=2.0, invocations=6)
+    hyb = HybridPredictor()
+    HistoryPolicy().fit(tr).prime(hyb, time_scale=0.1)
+    pred = hyb.recurrence.predict("tick")
+    assert pred is not None
+    assert pred.expected_delay == pytest.approx(0.2)
+
+
+# ----------------------------------------------------------------------
+# Live pool reconfiguration
+def test_reconfigure_changes_reap_policy_live():
+    now = [0.0]
+    pool = InstancePool(_noop_spec("f"), PoolConfig(keep_alive=100.0),
+                        clock=lambda: now[0])
+    inst, _, _ = pool.acquire()
+    pool.release(inst)
+    now[0] = 50.0
+    assert pool.reap() == 0
+    old = pool.reconfigure(PoolConfig(keep_alive=10.0))
+    assert old.keep_alive == 100.0
+    assert pool.reap() == 1               # 50s idle > new 10s keep-alive
+    assert pool.size() == 0
+
+
+def test_reconfigure_raised_cap_unblocks_waiting_acquire():
+    pool = InstancePool(_noop_spec("f"), PoolConfig(max_instances=1,
+                                                    keep_alive=100.0))
+    held, _, _ = pool.acquire()
+    got = []
+
+    def waiter():
+        inst, _, _ = pool.acquire(timeout=5.0)
+        got.append(inst)
+        pool.release(inst)
+
+    import threading
+    th = threading.Thread(target=waiter)
+    th.start()
+    time.sleep(0.05)
+    assert not got                        # blocked at the old cap
+    pool.reconfigure(PoolConfig(max_instances=2, keep_alive=100.0))
+    th.join(timeout=5.0)
+    assert got and pool.size() == 2
+    pool.release(held)
+
+
+# ----------------------------------------------------------------------
+# Replay through the scheduler
+def test_replayer_drives_scheduler_and_accounts_every_event():
+    tr = Trace.merge([
+        Trace.periodic("a", period=1.0, invocations=4),
+        Trace([InvocationEvent("b", 0.5, chain=("b", "c"))]),
+    ])
+    sched = _sched()
+    for fn in ("a", "b", "c"):
+        sched.register(_noop_spec(fn))
+    report = TraceReplayer(sched, tr, time_scale=0.01).run()
+    summary = sched.accountant.latency_summary(APP)
+    sched.shutdown()
+    assert report.requests == 5 and report.errors == 0
+    # 4 single invocations + the 2-stage chain = 6 accounted invocations
+    assert summary["count"] == 6
+    assert "cold_start_rate" in summary
+
+
+def test_replayer_strict_raises_and_lenient_skips_unregistered():
+    tr = Trace([InvocationEvent("known", 0.0),
+                InvocationEvent("ghost", 0.01)])
+    sched = _sched()
+    sched.register(_noop_spec("known"))
+    with pytest.raises(KeyError):
+        TraceReplayer(sched, tr, time_scale=0.01).run()
+    report = TraceReplayer(sched, tr, time_scale=0.01, strict=False).run()
+    sched.shutdown()
+    assert report.requests == 1 and report.skipped == 1
+
+
+def test_replayer_oracle_prewarms_ahead_of_arrivals():
+    tr = Trace.periodic("f", period=1.0, invocations=3, phase=1.0)
+    sched = _sched(prewarm_provision=True)
+    sched.register(_noop_spec("f"))
+    report = TraceReplayer(sched, tr, time_scale=0.02,
+                           oracle_lead=0.5).run(freshen=False)
+    stats = sched.pool("f").stats()
+    sched.shutdown()
+    assert report.prewarms == 3
+    assert stats["prewarm_dispatches"] >= 3
+
+
+def test_replayer_lenient_oracle_counts_each_skipped_event_once():
+    tr = Trace.periodic("ghost", period=1.0, invocations=3)
+    sched = _sched()
+    report = TraceReplayer(sched, tr, time_scale=0.01, strict=False,
+                           oracle_lead=0.5).run()
+    sched.shutdown()
+    assert report.skipped == 3 and report.requests == 0
+
+
+def test_long_period_prewarm_not_charged_as_misprediction():
+    # a 60s-period recurrence prewarm must not trip the accuracy gate
+    # just because the misprediction horizon (5s) is shorter than the
+    # period: pending freshens are anchored at the predicted arrival
+    from repro.core import Accountant
+    acct = Accountant(misprediction_horizon=5.0)
+    acct.record_freshen(APP, "timer", 0.1, now=0.0, expected_delay=60.0)
+    acct.record_invocation(APP, "timer", 0.01, now=60.0)
+    bill = acct.bill(APP)
+    assert bill.useful_freshens == 1 and bill.mispredicted_freshens == 0
+    # ...but one that never arrives still expires (horizon past 65s)
+    acct.record_freshen(APP, "timer", 0.1, now=100.0, expected_delay=60.0)
+    acct.sweep_expired(APP, now=200.0)
+    assert acct.bill(APP).mispredicted_freshens == 1
+
+
+def test_replayer_rejects_nonpositive_time_scale():
+    with pytest.raises(ValueError):
+        TraceReplayer(_sched(), Trace([]), time_scale=0.0)
+
+
+# ----------------------------------------------------------------------
+# Engine adoption of a trace-learned policy
+def test_engine_adopt_trace_policy_retunes_pools_and_seeds_recurrence():
+    eng = ServingEngine()
+    eng.scheduler.register(_noop_spec("tick"))
+    tr = Trace.periodic("tick", period=2.0, invocations=8)
+    policy = HistoryPolicy().fit(tr)
+    try:
+        applied = eng.adopt_trace_policy(policy, time_scale=0.5)
+        assert "tick" in applied
+        assert eng.scheduler.pool("tick").config.keep_alive == pytest.approx(
+            applied["tick"].keep_alive)
+        # prime attached a recurrence predictor with scaled gaps
+        pred = eng.scheduler.predictor.recurrence.predict("tick")
+        assert pred is not None and pred.expected_delay == pytest.approx(1.0)
+    finally:
+        eng.close()

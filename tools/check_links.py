@@ -1,0 +1,72 @@
+"""Markdown link checker (stdlib-only, used by CI).
+
+Walks the repo's tracked markdown files and verifies that every
+*relative* link target exists on disk.  External links (http/https/
+mailto) and pure in-page anchors (#...) are skipped; a `path#anchor`
+link is checked for the file only.
+
+Usage:  python tools/check_links.py [file.md ...]
+        (no args: checks every .md under the repo root, skipping hidden
+        directories and node_modules)
+
+Exit status: 0 when all links resolve, 1 otherwise (broken links listed
+on stderr).
+"""
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def repo_root() -> str:
+    return os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def md_files(root: str):
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames
+                       if not d.startswith(".") and d != "node_modules"]
+        for fn in filenames:
+            if fn.endswith(".md"):
+                yield os.path.join(dirpath, fn)
+
+
+def check_file(path: str):
+    broken = []
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            for target in LINK_RE.findall(line):
+                if target.startswith(SKIP_PREFIXES):
+                    continue
+                rel = target.split("#", 1)[0]
+                if not rel:
+                    continue
+                resolved = os.path.normpath(
+                    os.path.join(os.path.dirname(path), rel))
+                if not os.path.exists(resolved):
+                    broken.append((lineno, target))
+    return broken
+
+
+def main(argv) -> int:
+    root = repo_root()
+    paths = argv[1:] or sorted(md_files(root))
+    failures = 0
+    for path in paths:
+        broken = check_file(path)
+        for lineno, target in broken:
+            failures += 1
+            print(f"{os.path.relpath(path, root)}:{lineno}: "
+                  f"broken link -> {target}", file=sys.stderr)
+    if failures:
+        print(f"link check FAILED: {failures} broken link(s)",
+              file=sys.stderr)
+        return 1
+    print(f"link check OK ({len(paths)} markdown file(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
