@@ -1,0 +1,171 @@
+"""Cluster scaling benchmark: routing policy × freshen propagation × shards.
+
+The paper's freshen primitive says *when* to prewarm; at cluster scale
+the *where* decides whether the prewarm was worth anything — a warmed
+instance on a worker the router never picks is a misprediction with
+perfect timing.  This benchmark replays the bundled synthetic periodic
+trace (three staggered timer functions) into a ``repro.cluster`` fabric
+of 1/2/4 shards and crosses routing policy with freshen placement:
+
+* ``least_loaded/off``   — load-balanced routing, no freshen: every
+  return to a shard outlives the keep-alive, so arrivals run cold.
+* ``least_loaded/local`` — the predictor fires but its prewarm stays on
+  the shard that *observed* the invocation; load balancing then sends
+  the next arrival elsewhere.  Prediction and placement disagree: cold.
+* ``warmth/cross``       — warmth-aware routing + router-propagated
+  freshen: the prewarm is dispatched to the shard the routing decision
+  selects, and the next arrival is routed *to the warmth*.  This is the
+  tentpole configuration — prediction and placement agree.
+* ``sticky/cross``       — consistent-hash affinity: each function pins
+  to one shard, so warmth accrues there; the locality upper bound (but
+  no load balancing — a hot function cannot spill).
+
+All arms share one ``PoolConfig``: keep-alive (0.15s wall) is *between*
+one and two scaled periods (0.12s), so same-shard reuse stays warm while
+any routing bounce goes cold — the regime where placement, not sizing,
+decides the cold-start rate.  Recurrence prediction is primed from the
+trace (``HistoryPolicy.prime``) exactly as in ``trace_replay``.
+
+CSV rows (stdout, via benchmarks/run.py — schema in docs/benchmarks.md):
+``cluster_scale/<N>sh/<policy>/<arm>``; ``us_per_call`` is p95
+end-to-end latency in microseconds; ``derived`` packs p50/p99, cold
+counts and rate, cross-shard freshen count, spills, the per-shard
+routed/cold distributions, and the request count.
+
+Run on CPU:  PYTHONPATH=src python benchmarks/cluster_scale.py
+(harness: PYTHONPATH=src:. python benchmarks/run.py cluster_scale;
+CI smoke: CLUSTER_SCALE_SMOKE=1 shrinks to 1–2 shards and a few ticks.)
+"""
+import os
+import sys
+import time
+
+from repro.cluster import ClusterRouter
+from repro.core import FunctionSpec, PoolConfig, ServiceClass
+from repro.core.freshen import Action, FreshenPlan, PlanEntry
+from repro.workloads import HistoryPolicy, Trace, TraceReplayer
+
+FETCH_COST = 0.020       # seconds: the freshen-plan resource fetch
+COMPUTE_COST = 0.002     # seconds: the function body proper
+COLD_START = 0.015       # seconds: container/sandbox creation
+KEEP_ALIVE = 0.15        # wall seconds: one scaled period < this < two,
+                         # so same-shard reuse is warm, any bounce is cold
+SPILL_TIMEOUT = 0.08     # queued past this on a saturated shard -> drain
+
+ARMS = [("least-loaded", "off"), ("least-loaded", "local"),
+        ("warmth-aware", "cross"), ("sticky", "cross")]
+
+
+def _knobs():
+    """(shard_counts, ticks, time_scale); tiny under CLUSTER_SCALE_SMOKE."""
+    if os.environ.get("CLUSTER_SCALE_SMOKE"):
+        return (1, 2), 6, 0.12
+    return ((1, 2, 4),
+            int(os.environ.get("CLUSTER_SCALE_EVENTS", "48")),
+            float(os.environ.get("CLUSTER_SCALE_SCALE", "0.12")))
+
+
+def _trace(ticks: int) -> Trace:
+    """Three staggered timer functions — the periodic archetype at a load
+    where one shard could serve everything warm if routing lets it."""
+    return Trace.merge(
+        [Trace.periodic(f"tick-{i}", period=1.0, invocations=ticks,
+                        duration=COMPUTE_COST, phase=i * 0.29)
+         for i in range(3)],
+        name="periodic-mix")
+
+
+def _spec(name: str) -> FunctionSpec:
+    def make_plan(rt):
+        def fetch():
+            time.sleep(FETCH_COST)
+            return {"resource": name}
+        return FreshenPlan([PlanEntry("data", Action.FETCH, fetch)])
+
+    def code(ctx, args):
+        data = ctx.fr_fetch(0)
+        time.sleep(COMPUTE_COST)
+        return data["resource"]
+
+    return FunctionSpec(name, code, plan_factory=make_plan, app="trace")
+
+
+def _drive(shards: int, policy: str, arm: str, ticks: int,
+           scale: float) -> dict:
+    trace = _trace(ticks)
+    cfg = PoolConfig(max_instances=4, keep_alive=KEEP_ALIVE,
+                     cold_start_cost=COLD_START, prewarm_provision=True)
+    cluster = ClusterRouter.build(
+        shards, policy=policy, pool_config=cfg, spill_timeout=SPILL_TIMEOUT,
+        cross_freshen=(arm == "cross"))
+    for w in cluster.workers:
+        acct = w.scheduler.accountant
+        acct.service_class["trace"] = ServiceClass.LATENCY_SENSITIVE
+        acct.disable_after = 10 ** 9          # policy out of the way
+    for fn in trace.functions:
+        cluster.register(_spec(fn))
+    freshen = arm != "off"
+    if freshen:
+        HistoryPolicy().fit(trace).prime(cluster.predictor, time_scale=scale)
+    report = TraceReplayer(cluster, trace, time_scale=scale).run(
+        freshen=freshen)
+    summary = cluster.accountant.latency_summary("trace")
+    per_shard = cluster.accountant.per_shard("trace")
+    stats = cluster.stats()
+    cluster.shutdown()
+    summary.update(
+        requests=report.requests, errors=report.errors, wall=report.wall,
+        lag_p95=report.lag_p95,
+        cross_freshens=stats["cross_freshens"], spills=stats["spills"],
+        routed="|".join(str(stats["routed"][k])
+                        for k in sorted(stats["routed"])),
+        shard_cold="|".join(str(s["cold_starts"]) for s in per_shard))
+    return summary
+
+
+def _report(results: dict):
+    # human-readable table goes to stderr: run.py's stdout is a CSV contract
+    out = sys.stderr
+    any_s = next(iter(results.values()))
+    print(f"\n=== cluster_scale: periodic mix "
+          f"({any_s['requests']} requests/run) ===", file=out)
+    print(f"{'':28s} {'p50':>8s} {'p95':>8s} {'cold':>5s} {'rate':>6s} "
+          f"{'xfresh':>7s} {'spill':>6s} {'routed':>12s}", file=out)
+    for label, s in results.items():
+        print(f"{label:28s} {s['p50']*1e3:7.1f}ms {s['p95']*1e3:7.1f}ms "
+              f"{s['cold_starts']:5d} {s['cold_start_rate']:6.2f} "
+              f"{s['cross_freshens']:7d} {s['spills']:6d} "
+              f"{s['routed']:>12s}", file=out)
+
+
+def run():
+    """Harness entry (benchmarks/run.py): CSV rows name,us_per_call,derived."""
+    shard_counts, ticks, scale = _knobs()
+    results = {}
+    for shards in shard_counts:
+        for policy, arm in ARMS:
+            label = policy.replace("warmth-aware", "warmth").replace(
+                "least-loaded", "least_loaded")
+            results[f"{shards}sh/{label}/{arm}"] = _drive(
+                shards, policy, arm, ticks, scale)
+    _report(results)
+    rows = []
+    for label, s in results.items():
+        rows.append((f"cluster_scale/{label}",
+                     f"{s['p95'] * 1e6:.0f}",
+                     f"p50us={s['p50']*1e6:.0f};"
+                     f"p99us={s['p99']*1e6:.0f};"
+                     f"cold={s['cold_starts']};"
+                     f"cold_rate={s['cold_start_rate']:.3f};"
+                     f"xfreshen={s['cross_freshens']};"
+                     f"spills={s['spills']};"
+                     f"routed={s['routed']};"
+                     f"shard_cold={s['shard_cold']};"
+                     f"requests={s['requests']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for row in run():
+        print(",".join(str(x) for x in row))

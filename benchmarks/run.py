@@ -6,9 +6,9 @@ import time
 
 def main() -> None:
     mods = []
-    from benchmarks import (chain_e2e, fig4_fetch, fig5_warming, pool_load,
-                            prediction_quality, roofline, table1_triggers,
-                            trace_replay)
+    from benchmarks import (chain_e2e, cluster_scale, fig4_fetch,
+                            fig5_warming, pool_load, prediction_quality,
+                            roofline, table1_triggers, trace_replay)
     mods = [("table1_triggers", table1_triggers),
             ("fig4_fetch", fig4_fetch),
             ("fig5_warming", fig5_warming),
@@ -16,6 +16,7 @@ def main() -> None:
             ("prediction_quality", prediction_quality),
             ("pool_load", pool_load),
             ("trace_replay", trace_replay),
+            ("cluster_scale", cluster_scale),
             ("roofline", roofline)]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

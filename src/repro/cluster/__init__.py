@@ -1,0 +1,26 @@
+"""repro.cluster — the sharded multi-worker serving fabric.
+
+One ``FreshenScheduler`` is a single scheduling domain: its pools share
+one router and one accountant.  This package partitions the platform
+into shards and puts the paper's freshen primitive where it matters at
+scale — on the worker the router will actually pick:
+
+* ``worker``     — ``ClusterWorker``: one shard = one FreshenScheduler +
+  its pools, shard-tagged saturation errors, load/warmth signals, and
+  optional pinning to a jax device slice (``mesh()`` for per-shard
+  tensor parallelism via ``repro.sharding.partitioning``).
+* ``router``     — ``ClusterRouter`` with pluggable policies
+  (``least-loaded`` / ``warmth-aware`` / ``sticky`` consistent-hash),
+  cross-shard freshen propagation (prewarms land on the shard the
+  routing decision selects), spill-on-saturation queue draining, and
+  ``rebalance()``.
+* ``accounting`` — ``ClusterAccountant``: merged cluster-wide
+  ``latency_summary`` (raw-sample merge, since percentiles do not
+  compose) plus the per-shard decomposition.
+"""
+from repro.cluster.accounting import ClusterAccountant  # noqa: F401
+from repro.cluster.router import (POLICIES, ClusterRouter,  # noqa: F401
+                                  LeastLoadedPolicy, StickyPolicy,
+                                  WarmthAwarePolicy, make_policy,
+                                  partition_devices)
+from repro.cluster.worker import ClusterWorker  # noqa: F401

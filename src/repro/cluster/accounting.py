@@ -1,0 +1,77 @@
+"""ClusterAccountant — cluster-wide aggregation over per-shard ledgers.
+
+Each ``ClusterWorker`` keeps its own ``Accountant`` so the cluster can
+localize latency and cold starts to a shard; this module provides the
+merged view.  Percentiles do not compose (a max of shard p95s is not the
+cluster p95), so ``latency_summary`` merges the shards' raw sample
+windows and re-ranks — the summary is exactly what one global Accountant
+would have reported, while ``per_shard`` keeps the decomposition the
+router and benchmarks use to see *where* the tail lives.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+from repro.core.accounting import Accountant, AppBill, _percentile_sorted
+
+
+class ClusterAccountant:
+    """Read-side merge of several shards' ``Accountant`` ledgers."""
+
+    def __init__(self, accountants: Sequence[Accountant]):
+        if not accountants:
+            raise ValueError("need at least one shard accountant")
+        self.accountants: List[Accountant] = list(accountants)
+
+    def apps(self) -> List[str]:
+        apps = set()
+        for acct in self.accountants:
+            apps.update(acct.apps())
+        return sorted(apps)
+
+    def bill(self, app: str) -> AppBill:
+        """Cluster-wide bill: every field summed across shards (bills are
+        additive — seconds, invocation counts, cold starts).  Reads via
+        ``peek_bill`` so polling an unknown app never plants phantom
+        entries in every shard's ledger."""
+        total = AppBill()
+        for acct in self.accountants:
+            b = acct.peek_bill(app)
+            total.function_seconds += b.function_seconds
+            total.freshen_seconds += b.freshen_seconds
+            total.freshen_invocations += b.freshen_invocations
+            total.function_invocations += b.function_invocations
+            total.mispredicted_freshens += b.mispredicted_freshens
+            total.useful_freshens += b.useful_freshens
+            total.cold_starts += b.cold_starts
+            total.queue_seconds += b.queue_seconds
+        return total
+
+    def latency_summary(self, app: str) -> dict:
+        """The same shape as ``Accountant.latency_summary`` (drop-in for
+        HistoryPolicy.adapt and benchmark reporting), computed over the
+        union of every shard's sample window."""
+        lats: List[float] = []
+        qds: List[float] = []
+        for acct in self.accountants:
+            lats.extend(acct.latency_samples(app))
+            qds.extend(acct.queue_delay_samples(app))
+        lats.sort()
+        b = self.bill(app)
+        return {
+            "count": len(lats),
+            "p50": _percentile_sorted(lats, 50),
+            "p95": _percentile_sorted(lats, 95),
+            "p99": _percentile_sorted(lats, 99),
+            "max": lats[-1] if lats else 0.0,
+            "mean_queue_delay": sum(qds) / len(qds) if qds else 0.0,
+            "max_queue_delay": max(qds) if qds else 0.0,
+            "cold_starts": b.cold_starts,
+            "cold_start_rate": (b.cold_starts / b.function_invocations
+                                if b.function_invocations else 0.0),
+        }
+
+    def per_shard(self, app: str) -> List[dict]:
+        """Each shard's own ``latency_summary`` in shard order — the view
+        that shows which shard the tail (or the cold starts) lives on."""
+        return [acct.latency_summary(app) for acct in self.accountants]

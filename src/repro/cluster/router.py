@@ -1,0 +1,397 @@
+"""ClusterRouter — warmth-aware request routing and cross-shard freshen.
+
+The router owns the cluster-level decisions the paper's single-node
+freshen machinery cannot express:
+
+* **Routing policies** (pluggable): which shard receives an arriving
+  invocation.  ``least-loaded`` balances in-flight work, ``warmth-aware``
+  prefers shards holding an idle *initialized* instance of the target
+  function (a cold start avoided beats a marginally shorter queue), and
+  ``sticky`` consistent-hashes the function name onto the shard ring so
+  a function keeps hitting the same warm pool across arrivals — and only
+  ~1/N of functions move when the shard count changes.
+* **Cross-shard freshen propagation**: every worker's
+  ``FreshenScheduler.freshen_route`` hook points back here, so when the
+  predictor fires on shard A the router re-runs its *routing* decision
+  for the predicted function and dispatches the prewarm on the shard an
+  actual arrival would be sent to.  Prediction and placement agree: a
+  prewarm that warms the wrong worker is a misprediction no matter how
+  accurate the predictor was.
+* **Queue rebalancing**: with ``spill_timeout`` set, an invocation that
+  has queued on a saturated shard past the timeout is drained to the
+  neighbor with the most idle capacity (cascading until some shard
+  admits it); ``rebalance()`` additionally pushes warmth toward idle
+  neighbors of hot shards so warmth-aware routing diverts *future*
+  arrivals before they queue.
+"""
+from __future__ import annotations
+
+import bisect
+import hashlib
+import itertools
+import threading
+from concurrent.futures import Future
+from dataclasses import replace
+from typing import Dict, List, Optional, Sequence, Union
+
+from repro.core.accounting import Accountant
+from repro.core.pool import PoolConfig, PoolSaturated
+from repro.core.prediction import HybridPredictor, Prediction
+from repro.core.runtime import FunctionSpec, Runtime
+
+from repro.cluster.accounting import ClusterAccountant
+from repro.cluster.worker import ClusterWorker
+
+
+class LeastLoadedPolicy:
+    """Route to the shard with the least in-flight work (busy instances +
+    queued acquires); ties are spread round-robin so an idle cluster does
+    not funnel everything onto shard 0."""
+
+    name = "least-loaded"
+
+    def __init__(self):
+        self._rr = itertools.count()
+
+    def select(self, fn: str, workers: Sequence[ClusterWorker]) -> int:
+        loads = [(w.load(), w.shard_id) for w in workers]
+        lo = min(load for load, _ in loads)
+        tied = [shard for load, shard in loads if load == lo]
+        if len(tied) == 1:
+            return tied[0]
+        return tied[next(self._rr) % len(tied)]
+
+
+class WarmthAwarePolicy:
+    """Prefer shards holding an idle warm instance of the target function;
+    among warm shards pick the warmest (then least loaded).  With no
+    warmth anywhere, fall back to ``fallback`` (least-loaded by default) —
+    which is also where a cross-shard prewarm will have been sent, so the
+    warmth this policy chases is the warmth the router itself placed."""
+
+    name = "warmth-aware"
+
+    def __init__(self, fallback=None):
+        self.fallback = fallback or LeastLoadedPolicy()
+
+    def select(self, fn: str, workers: Sequence[ClusterWorker]) -> int:
+        # read each shard's warmth once: the count is a locked snapshot,
+        # and re-reading could rank a shard on warmth it just lost
+        warmth = [(w.warm_idle(fn), w) for w in workers]
+        warm = [(n, -w.load(), -w.shard_id, w.shard_id)
+                for n, w in warmth if n > 0]
+        if warm:
+            return max(warm)[3]
+        return self.fallback.select(fn, workers)
+
+
+class StickyPolicy:
+    """Consistent-hash affinity: hash the function name onto a virtual-node
+    ring of shards.  Deterministic across router instances and processes
+    (keyed hashing, not Python's salted ``hash``), and stable under shard
+    count changes: growing N shards to N+1 remaps only the functions whose
+    ring segment the new shard's virtual nodes capture (~1/(N+1))."""
+
+    name = "sticky"
+
+    def __init__(self, replicas: int = 64):
+        self.replicas = replicas
+        self._rings: Dict[tuple, list] = {}
+
+    @staticmethod
+    def _hash(key: str) -> int:
+        digest = hashlib.blake2b(key.encode(), digest_size=8).digest()
+        return int.from_bytes(digest, "big")
+
+    def _ring(self, shard_ids: Sequence[int]) -> list:
+        key = tuple(sorted(shard_ids))
+        ring = self._rings.get(key)
+        if ring is None:
+            ring = sorted((self._hash(f"shard:{s}#vnode:{v}"), s)
+                          for s in key for v in range(self.replicas))
+            self._rings[key] = ring
+        return ring
+
+    def select(self, fn: str, workers: Sequence[ClusterWorker]) -> int:
+        ring = self._ring([w.shard_id for w in workers])
+        idx = bisect.bisect_right(ring, (self._hash(fn), -1))
+        return ring[idx % len(ring)][1]
+
+
+POLICIES = {p.name: p for p in
+            (LeastLoadedPolicy, WarmthAwarePolicy, StickyPolicy)}
+
+
+def make_policy(policy: Union[str, object]):
+    if isinstance(policy, str):
+        try:
+            return POLICIES[policy]()
+        except KeyError:
+            raise ValueError(f"unknown routing policy {policy!r}; "
+                             f"one of {sorted(POLICIES)}") from None
+    return policy
+
+
+class ClusterRouter:
+    """The sharded serving fabric's front door: route, propagate, drain."""
+
+    def __init__(self, workers: Sequence[ClusterWorker],
+                 policy: Union[str, object] = "warmth-aware",
+                 spill_timeout: Optional[float] = None,
+                 cross_freshen: bool = True):
+        if not workers:
+            raise ValueError("a cluster needs at least one worker")
+        self.workers: List[ClusterWorker] = list(workers)
+        self._by_shard = {w.shard_id: w for w in self.workers}
+        if len(self._by_shard) != len(self.workers):
+            raise ValueError("duplicate shard ids")
+        self.policy = make_policy(policy)
+        self.spill_timeout = spill_timeout
+        self.cross_freshen = cross_freshen
+        self.accountant = ClusterAccountant(
+            [w.scheduler.accountant for w in self.workers])
+        self._lock = threading.Lock()
+        # router counters (read under the lock via stats())
+        self.routed: Dict[int, int] = {w.shard_id: 0 for w in self.workers}
+        self.cross_freshens = 0
+        self.local_freshens = 0
+        self.spills = 0
+        self.saturations: Dict[int, int] = {w.shard_id: 0
+                                            for w in self.workers}
+        for w in self.workers:
+            w.scheduler.freshen_route = (
+                lambda pred, _origin=w.shard_id:
+                    self._route_freshen(_origin, pred))
+
+    # -- construction ---------------------------------------------------
+    @classmethod
+    def build(cls, num_shards: int,
+              policy: Union[str, object] = "warmth-aware",
+              pool_config: Optional[PoolConfig] = None,
+              predictor: Optional[HybridPredictor] = None,
+              devices: Optional[Sequence] = None,
+              max_router_threads: int = 16,
+              spill_timeout: Optional[float] = None,
+              cross_freshen: bool = True) -> "ClusterRouter":
+        """A local cluster: ``num_shards`` workers sharing one predictor
+        (prediction is global knowledge) with per-shard accountants.
+        ``devices`` (optional jax device list) is partitioned round-robin
+        so each worker pins its functions to a distinct slice."""
+        predictor = predictor or HybridPredictor()
+        slices = partition_devices(devices, num_shards)
+        workers = [ClusterWorker(k, predictor=predictor,
+                                 accountant=Accountant(),
+                                 pool_config=pool_config,
+                                 devices=slices[k],
+                                 max_router_threads=max_router_threads)
+                   for k in range(num_shards)]
+        return cls(workers, policy=policy, spill_timeout=spill_timeout,
+                   cross_freshen=cross_freshen)
+
+    @property
+    def num_shards(self) -> int:
+        return len(self.workers)
+
+    @property
+    def predictor(self) -> HybridPredictor:
+        return self.workers[0].scheduler.predictor
+
+    def worker(self, shard: int) -> ClusterWorker:
+        return self._by_shard[shard]
+
+    def register(self, spec: FunctionSpec,
+                 config: Optional[PoolConfig] = None,
+                 shards: Optional[Sequence[int]] = None
+                 ) -> Dict[int, Runtime]:
+        """Register a function on every shard (default) or a subset;
+        returns the per-shard primary runtimes.  An explicit ``config``
+        is copied per shard: pools own their config object (and
+        ``reconfigure`` mutates it in place), so sharing one across
+        shards would let adapting shard A silently retune shard B."""
+        targets = (self.workers if shards is None
+                   else [self._by_shard[s] for s in shards])
+        return {w.shard_id: w.register(
+                    spec, config=None if config is None else replace(config))
+                for w in targets}
+
+    # -- routing --------------------------------------------------------
+    def _eligible(self, fn: str) -> List[ClusterWorker]:
+        return [w for w in self.workers if w.has_function(fn)]
+
+    def has_function(self, fn: str) -> bool:
+        return bool(self._eligible(fn))
+
+    def route(self, fn: str) -> int:
+        """The placement decision: which shard an arrival of ``fn`` goes
+        to right now.  Used identically for invocations, oracle prewarms,
+        and predictor-driven cross-shard freshen."""
+        eligible = self._eligible(fn)
+        if not eligible:
+            raise KeyError(f"function {fn!r} not registered on any shard")
+        return self.policy.select(fn, eligible)
+
+    def submit(self, fn: str, args=None, freshen_successors: bool = True
+               ) -> Future:
+        """Route one invocation; returns a Future.  With ``spill_timeout``
+        set, saturation on the chosen shard drains the request to the
+        neighbor with the most idle capacity instead of failing."""
+        shard = self.route(fn)
+        if self.spill_timeout is None:
+            with self._lock:
+                self.routed[shard] += 1
+            return self._by_shard[shard].submit(fn, args, freshen_successors)
+        outer: Future = Future()
+        self._attempt(fn, args, freshen_successors, shard, set(), outer)
+        return outer
+
+    def _attempt(self, fn: str, args, freshen: bool, shard: int,
+                 tried: set, outer: Future):
+        tried.add(shard)
+        with self._lock:
+            self.routed[shard] += 1
+        rest = [w.shard_id for w in self._eligible(fn)
+                if w.shard_id not in tried]
+        # the last untried shard gets no timeout: the request must land
+        # somewhere, and by then every alternative has been offered
+        timeout = self.spill_timeout if rest else None
+        inner = self._by_shard[shard].submit(fn, args, freshen,
+                                             acquire_timeout=timeout)
+
+        def _done(f: Future):
+            # Future._invoke_callbacks swallows callback exceptions, so any
+            # failure here must be routed to the outer future explicitly —
+            # otherwise a caller blocked on outer.result() hangs forever
+            try:
+                exc = f.exception()
+                if exc is None:
+                    outer.set_result(f.result())
+                    return
+                if isinstance(exc, PoolSaturated) and rest:
+                    with self._lock:
+                        self.spills += 1
+                        self.saturations[shard] += 1
+                    nxt = max(rest, key=lambda s: (
+                        self._by_shard[s].idle_capacity(fn),
+                        -self._by_shard[s].load()))
+                    # the saturated attempt already ran prediction +
+                    # successor freshen for this arrival: a retry is the
+                    # same logical invocation, so it must not observe or
+                    # freshen again (double-counted inter-arrivals would
+                    # corrupt the recurrence histograms)
+                    self._attempt(fn, args, False, nxt, tried, outer)
+                    return
+                outer.set_exception(exc)
+            except BaseException as e:                # noqa: BLE001
+                if not outer.done():
+                    outer.set_exception(e)
+
+        inner.add_done_callback(_done)
+
+    def submit_chain(self, fns: List[str], args=None,
+                     freshen: bool = True) -> Future:
+        """Chains route by their head function and run whole on one shard:
+        chain members share a runtime scope, which never spans workers."""
+        shard = self.route(fns[0])
+        with self._lock:
+            self.routed[shard] += 1
+        return self._by_shard[shard].submit_chain(fns, args, freshen)
+
+    def invoke(self, fn: str, args=None, freshen_successors: bool = True):
+        return self.submit(fn, args, freshen_successors).result()
+
+    # -- freshen propagation -------------------------------------------
+    def _route_freshen(self, origin: int, pred: Prediction
+                       ) -> Optional[bool]:
+        """``FreshenScheduler.freshen_route`` hook for shard ``origin``:
+        place the prewarm where the predicted invocation will be routed.
+        Returns None to keep the freshen shard-local (the target *is*
+        the origin, propagation is disabled, or the function is unknown
+        to the cluster), letting the origin scheduler's normal dispatch
+        path — accounting gate included — run unchanged; otherwise the
+        target shard's dispatch outcome (its own gate may still drop the
+        prewarm, which must not count as a cross-shard freshen)."""
+        if not self.cross_freshen:
+            return None
+        try:
+            target = self.route(pred.fn)
+        except KeyError:
+            return None
+        if target == origin:
+            with self._lock:
+                self.local_freshens += 1
+            return None
+        dispatched = self._by_shard[target].scheduler._dispatch_freshen(
+            pred, _routed=True)
+        if dispatched:
+            with self._lock:
+                self.cross_freshens += 1
+        return dispatched
+
+    def prewarm(self, fn: str, provision: bool = True):
+        """Externally-driven prewarm (oracle trace replay): freshen the
+        shard the router would send the arrival to."""
+        return self._by_shard[self.route(fn)].prewarm(fn,
+                                                      provision=provision)
+
+    # -- rebalancing ----------------------------------------------------
+    def rebalance(self, min_queue_depth: int = 1) -> List[tuple]:
+        """Push warmth from hot shards toward idle neighbors: for every
+        function queueing ``min_queue_depth``+ acquires on some shard,
+        prewarm-provision it on the eligible neighbor with the most idle
+        capacity.  Warmth-aware routing then diverts future arrivals to
+        the neighbor, draining the hot shard without touching in-flight
+        work.  Returns ``(fn, hot_shard, target_shard)`` actions."""
+        actions = []
+        for w in self.workers:
+            for fn, pool in list(w.scheduler.pools.items()):
+                if pool.waiting_count() < min_queue_depth:
+                    continue
+                neighbors = [n for n in self._eligible(fn)
+                             if n.shard_id != w.shard_id
+                             and n.idle_capacity(fn) > 0]
+                if not neighbors:
+                    continue
+                target = max(neighbors,
+                             key=lambda n: (n.idle_capacity(fn), -n.load()))
+                target.prewarm(fn, provision=True)
+                actions.append((fn, w.shard_id, target.shard_id))
+        return actions
+
+    # -- lifecycle ------------------------------------------------------
+    def stats(self) -> dict:
+        with self._lock:
+            counters = {"policy": self.policy.name,
+                        "routed": dict(self.routed),
+                        "cross_freshens": self.cross_freshens,
+                        "local_freshens": self.local_freshens,
+                        "spills": self.spills,
+                        "saturations": dict(self.saturations)}
+        counters["shards"] = {w.shard_id: w.stats() for w in self.workers}
+        return counters
+
+    def platform_stats(self) -> dict:
+        """Per-shard pool stats keyed ``shard<k>/<fn>`` (flat, so existing
+        tooling that iterates scheduler.platform_stats() keys still
+        works against a cluster)."""
+        out = {}
+        for w in self.workers:
+            for fn, stats in w.scheduler.platform_stats().items():
+                out[f"shard{w.shard_id}/{fn}"] = stats
+        return out
+
+    def shutdown(self, wait: bool = True):
+        for w in self.workers:
+            w.shutdown(wait=wait)
+
+
+def partition_devices(devices: Optional[Sequence], num_shards: int
+                      ) -> List[Optional[list]]:
+    """Round-robin a device list into ``num_shards`` slices (``None``
+    slices when there are no devices, or fewer devices than shards —
+    pinning is best-effort, never a requirement)."""
+    if not devices:
+        return [None] * num_shards
+    slices: List[list] = [[] for _ in range(num_shards)]
+    for i, d in enumerate(devices):
+        slices[i % num_shards].append(d)
+    return [s or None for s in slices]

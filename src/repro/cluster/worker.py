@@ -1,0 +1,154 @@
+"""ClusterWorker — one shard of the serving fabric.
+
+A worker wraps one ``FreshenScheduler`` (and therefore one set of
+``InstancePool``s) and gives it a shard identity: pools raise
+shard-tagged ``PoolSaturated`` errors, load/warmth signals are exposed
+in the shape the routing policies consume, and the worker can be pinned
+to a slice of the host's jax devices so each shard's function bodies run
+on distinct hardware (``repro.sharding.partitioning`` can then build
+per-shard parameter shardings over ``ClusterWorker.mesh()``).
+
+Workers never talk to each other: all cross-shard behavior (routing,
+freshen propagation, queue rebalancing) lives in
+``repro.cluster.router.ClusterRouter``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from concurrent.futures import Future
+from typing import Any, List, Optional, Sequence
+
+from repro.core.accounting import Accountant
+from repro.core.pool import InstancePool, PoolConfig
+from repro.core.prediction import HybridPredictor
+from repro.core.runtime import FunctionSpec, Runtime
+from repro.core.scheduler import FreshenScheduler
+
+
+class ClusterWorker:
+    """One shard: a FreshenScheduler plus shard identity and device slice.
+
+    ``predictor`` is usually the cluster-shared ``HybridPredictor`` —
+    prediction is global knowledge (chains and periodicity do not care
+    which shard an invocation landed on), so every shard's observations
+    feed one model while accounting stays per-shard (each worker gets its
+    own ``Accountant``, so the cluster can tell *where* latency and cold
+    starts happen).
+    """
+
+    def __init__(self, shard_id: int,
+                 predictor: Optional[HybridPredictor] = None,
+                 accountant: Optional[Accountant] = None,
+                 pool_config: Optional[PoolConfig] = None,
+                 devices: Optional[Sequence] = None,
+                 max_router_threads: int = 16):
+        self.shard_id = shard_id
+        self.devices = list(devices) if devices else None
+        self.scheduler = FreshenScheduler(
+            predictor=predictor, accountant=accountant,
+            pool_config=pool_config, max_router_threads=max_router_threads)
+
+    # -- registration ---------------------------------------------------
+    def _pinned(self, code):
+        """Wrap a function body so it runs with this shard's first device
+        as the jax default — invocations on different shards then place
+        their arrays on different hardware."""
+        devices = self.devices
+
+        def run_pinned(ctx, args):
+            import jax
+            with jax.default_device(devices[0]):
+                return code(ctx, args)
+        return run_pinned
+
+    def register(self, spec: FunctionSpec,
+                 config: Optional[PoolConfig] = None) -> Runtime:
+        """Register a function on this shard; its pool is shard-tagged so
+        saturation errors name the shard."""
+        if self.devices:
+            spec = dataclasses.replace(spec, code=self._pinned(spec.code))
+        rt = self.scheduler.register(spec, config=config)
+        self.scheduler.pools[spec.name].shard = self.shard_id
+        return rt
+
+    def mesh(self, axis_name: str = "model"):
+        """A 1-axis jax Mesh over this worker's device slice, for use with
+        ``repro.sharding.partitioning.shard_params`` when an endpoint's
+        weights should be tensor-parallel *within* the shard."""
+        if not self.devices:
+            raise ValueError(f"shard {self.shard_id} has no pinned devices")
+        import numpy as np
+        from jax.sharding import Mesh
+        return Mesh(np.asarray(self.devices), (axis_name,))
+
+    # -- invocation (delegated) -----------------------------------------
+    def has_function(self, fn: str) -> bool:
+        return fn in self.scheduler.pools
+
+    def submit(self, fn: str, args: Any = None,
+               freshen_successors: bool = True,
+               acquire_timeout: Optional[float] = None) -> Future:
+        return self.scheduler.submit(fn, args, freshen_successors,
+                                     acquire_timeout)
+
+    def submit_chain(self, fns: List[str], args: Any = None,
+                     freshen: bool = True) -> Future:
+        return self.scheduler.submit_chain(fns, args, freshen)
+
+    def invoke(self, fn: str, args: Any = None,
+               freshen_successors: bool = True):
+        return self.scheduler.invoke(fn, args,
+                                     freshen_successors=freshen_successors)
+
+    def prewarm(self, fn: str, provision: bool = True):
+        return self.scheduler.prewarm(fn, provision=provision)
+
+    # -- routing signals ------------------------------------------------
+    def pool(self, fn: str) -> Optional[InstancePool]:
+        return self.scheduler.pools.get(fn)
+
+    def warm_idle(self, fn: str) -> int:
+        """Idle initialized instances of ``fn`` on this shard — the
+        warmth-aware policy's primary signal."""
+        pool = self.scheduler.pools.get(fn)
+        return pool.warm_idle_count() if pool is not None else 0
+
+    def queue_depth(self, fn: Optional[str] = None) -> int:
+        """Blocked acquires, for one function or the whole shard."""
+        pools = self.scheduler.pools
+        if fn is not None:
+            pool = pools.get(fn)
+            return pool.waiting_count() if pool is not None else 0
+        return sum(p.waiting_count() for p in pools.values())
+
+    def load(self, fn: Optional[str] = None) -> int:
+        """Busy instances + blocked acquires — the least-loaded policy's
+        signal.  Whole-shard by default: one worker's instances share the
+        shard's hardware, so load on any pool slows every pool."""
+        pools = self.scheduler.pools
+        if fn is not None:
+            pool = pools.get(fn)
+            return ((pool.busy_count() + pool.waiting_count())
+                    if pool is not None else 0)
+        return sum(p.busy_count() + p.waiting_count()
+                   for p in pools.values())
+
+    def idle_capacity(self, fn: str) -> int:
+        """Instances ``fn`` could run on here without queueing: idle ones
+        plus the headroom below the pool cap.  Rebalancing drains a hot
+        shard's queue toward the neighbor maximizing this."""
+        pool = self.scheduler.pools.get(fn)
+        if pool is None:
+            return 0
+        s = pool.stats()
+        return s["idle"] + max(0, pool.config.max_instances - s["instances"])
+
+    # -- lifecycle ------------------------------------------------------
+    def stats(self) -> dict:
+        out = {"shard": self.shard_id, "load": self.load(),
+               "queue_depth": self.queue_depth()}
+        out["pools"] = self.scheduler.platform_stats()
+        return out
+
+    def shutdown(self, wait: bool = True):
+        self.scheduler.shutdown(wait=wait)

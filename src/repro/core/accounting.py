@@ -95,6 +95,14 @@ class Accountant:
         with self._lock:
             return self._bills.setdefault(app, AppBill())
 
+    def peek_bill(self, app: str) -> AppBill:
+        """Read-only view: the app's bill, or an empty unattached one.
+        Unlike ``bill`` this never inserts into the ledger, so cluster
+        aggregation and monitoring loops can poll arbitrary app names
+        without growing every shard's ``_bills`` with phantom entries."""
+        with self._lock:
+            return self._bills.get(app) or AppBill()
+
     # ------------------------------------------------------------------
     def record_freshen(self, app: str, fn: str, seconds: float,
                        now: Optional[float] = None, *,
@@ -137,6 +145,24 @@ class Accountant:
             b.useful_freshens += len(matched)
             b.mispredicted_freshens += len(expired)
             self._pending[fn] = []
+
+    def latency_samples(self, app: str) -> list:
+        """Raw end-to-end latency samples (seconds, unsorted) in the
+        current window.  Percentiles do not compose across ledgers, so
+        cluster-wide aggregation (``repro.cluster.ClusterAccountant``)
+        merges raw samples from every shard and re-ranks."""
+        with self._lock:
+            return list(self._latencies.get(app, ()))
+
+    def queue_delay_samples(self, app: str) -> list:
+        """Raw queueing-delay samples (seconds, unsorted) in the window."""
+        with self._lock:
+            return list(self._queue_delays.get(app, ()))
+
+    def apps(self) -> list:
+        """Every application this ledger has billed."""
+        with self._lock:
+            return sorted(self._bills)
 
     def latency_summary(self, app: str) -> dict:
         """p50/p95/p99 end-to-end latency, queueing delay, and cold starts

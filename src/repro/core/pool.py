@@ -71,7 +71,25 @@ class PooledInstance:
 
 
 class PoolSaturated(TimeoutError):
-    """acquire() timed out: every instance busy and the pool at its cap."""
+    """acquire() timed out: every instance busy and the pool at its cap.
+
+    Carries the saturation context as structured fields (``fn``,
+    ``queue_depth``, ``pool_size``, ``max_instances``, ``shard``) so
+    callers catching it out of a router Future — notably the cluster
+    benchmarks — can report *which* function on *which* shard saturated,
+    not just that something timed out."""
+
+    def __init__(self, fn: str, queue_depth: int = 0, pool_size: int = 0,
+                 max_instances: int = 0, shard: Optional[int] = None):
+        self.fn = fn
+        self.queue_depth = queue_depth
+        self.pool_size = pool_size
+        self.max_instances = max_instances
+        self.shard = shard
+        where = f" on shard {shard}" if shard is not None else ""
+        super().__init__(
+            f"pool {fn!r}{where} saturated: {queue_depth} waiting, "
+            f"{pool_size}/{max_instances} instances all busy")
 
 
 class InstancePool:
@@ -84,6 +102,9 @@ class InstancePool:
         self.spec = spec
         self.config = config or PoolConfig()
         self.clock = clock
+        # set by repro.cluster.ClusterWorker so saturation errors and stats
+        # name the shard this pool lives on; None outside a cluster
+        self.shard: Optional[int] = None
         self._factory = runtime_factory or (
             lambda: Runtime(spec, cold_start_cost=self.config.cold_start_cost,
                             clock=clock))
@@ -161,6 +182,23 @@ class InstancePool:
     def idle_count(self) -> int:
         with self._cond:
             return len(self._idle)
+
+    def warm_idle_count(self) -> int:
+        """Idle instances that are *initialized* — the ones an arrival can
+        land on without paying a cold start.  This is the warmth signal
+        the cluster's warmth-aware routing policy reads."""
+        with self._cond:
+            return sum(1 for i in self._idle if i.runtime.initialized)
+
+    def waiting_count(self) -> int:
+        """Acquires currently blocked waiting for an instance (queue
+        depth) — the load signal cluster routing and rebalancing read."""
+        with self._cond:
+            return self._waiting
+
+    def busy_count(self) -> int:
+        with self._cond:
+            return len(self._instances) - len(self._idle)
 
     # -- lifecycle ------------------------------------------------------
     def reap(self, now: Optional[float] = None) -> int:
@@ -242,8 +280,10 @@ class InstancePool:
                                  else timeout - (time.monotonic() - t0))
                     if remaining is not None and remaining <= 0:
                         raise PoolSaturated(
-                            f"pool {self.spec.name!r} saturated "
-                            f"({len(self._instances)} instances, all busy)")
+                            self.spec.name, queue_depth=self._waiting,
+                            pool_size=len(self._instances),
+                            max_instances=self.config.max_instances,
+                            shard=self.shard)
                     waited = True
                     self._cond.wait(remaining)
             finally:
@@ -353,6 +393,7 @@ class InstancePool:
             return {
                 "instances": len(self._instances),
                 "idle": len(self._idle),
+                "waiting": self._waiting,
                 "cold_starts": self.cold_starts,
                 "warm_acquires": self.warm_acquires,
                 "queued_acquires": self.queued_acquires,

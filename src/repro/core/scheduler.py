@@ -87,6 +87,16 @@ class FreshenScheduler:
         self.accountant = accountant or Accountant()
         self.pool_config = pool_config or PoolConfig()
         self.max_router_threads = max_router_threads
+        # Cross-shard freshen propagation hook (repro.cluster): when set,
+        # every prediction is offered to the callback first.  Returning
+        # None keeps the prediction shard-local (the target *is* this
+        # shard, or no cluster routing applies); returning a bool means
+        # the cluster router handled it on whichever shard it decided the
+        # predicted invocation will land on — True if the target shard
+        # actually dispatched the prewarm, False if its gate dropped it —
+        # and the local dispatch path is skipped either way.
+        self.freshen_route: Optional[
+            Callable[[Prediction], Optional[bool]]] = None
         self.pools: Dict[str, InstancePool] = {}
         self.runtimes = _PrimaryRuntimeView(self.pools)
         # bounded: a long-running platform appends events per invocation
@@ -146,24 +156,49 @@ class FreshenScheduler:
         control loop's write path); returns the previous config."""
         return self.pools[fn].reconfigure(config)
 
+    def has_function(self, fn: str) -> bool:
+        """Whether ``fn`` is registered — the invocation-target protocol
+        shared with ``repro.cluster.ClusterRouter`` (TraceReplayer speaks
+        it, so a trace replays into a scheduler or a cluster unchanged)."""
+        return fn in self.pools
+
+    def prewarm(self, fn: str, provision: bool = True
+                ) -> List[threading.Thread]:
+        """Externally-driven prewarm (oracle replay, cluster rebalancing):
+        freshen ``fn``'s pool, provisioning off the critical path when
+        nothing is idle."""
+        return self.pools[fn].prewarm_freshen(provision=provision)
+
     # ------------------------------------------------------------------
-    def _dispatch_freshen(self, pred: Prediction):
+    def _dispatch_freshen(self, pred: Prediction,
+                          *, _routed: bool = False) -> bool:
+        """Returns True when a prewarm was actually dispatched (locally or
+        on the shard the cluster routed it to), False when it was dropped
+        (unknown function, accounting gate, no target instance)."""
+        if not _routed and self.freshen_route is not None:
+            routed = self.freshen_route(pred)
+            if routed is not None:
+                self.events.append(FreshenEvent(
+                    pred.fn, pred.probability, bool(routed),
+                    "routed-cross-shard" if routed
+                    else "routed-cross-shard-gated"))
+                return bool(routed)
         pool = self.pools.get(pred.fn)
         if pool is None:
             self.events.append(FreshenEvent(pred.fn, pred.probability, False,
                                             "no-runtime"))
-            return
+            return False
         app = pool.spec.app
         if not self.accountant.should_freshen(app, pred.probability):
             self.events.append(FreshenEvent(pred.fn, pred.probability, False,
                                             "policy-gated"))
-            return
+            return False
         t0 = time.monotonic()
         threads = pool.prewarm_freshen()
         if not threads:
             self.events.append(FreshenEvent(pred.fn, pred.probability, False,
                                             "no-idle-instance"))
-            return
+            return False
         self.events.append(FreshenEvent(pred.fn, pred.probability, True,
                                         "dispatched"))
 
@@ -175,6 +210,7 @@ class FreshenScheduler:
                 expected_delay=pred.expected_delay)
 
         threading.Thread(target=_account, daemon=True).start()
+        return True
 
     def on_invocation_start(self, fn: str):
         """Called when fn begins: the best moment to freshen successors —

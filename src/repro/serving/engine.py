@@ -227,33 +227,82 @@ class ServingEngine:
     initializes the primary instance (the seed-era warm container);
     additional instances cold-start on demand."""
 
-    def __init__(self, scheduler=None):
+    def __init__(self, scheduler=None, router_policy: str = "warmth-aware",
+                 spill_timeout: Optional[float] = None):
         from repro.core.scheduler import FreshenScheduler
         self.scheduler = scheduler or FreshenScheduler()
         self.endpoints: Dict[str, ModelEndpoint] = {}
+        # the sharded fabric (repro.cluster), created lazily by the first
+        # deploy(..., shards=N>1); single-scheduler deploys are untouched
+        self.cluster = None
+        self.router_policy = router_policy
+        self.spill_timeout = spill_timeout
+        self._clustered: set = set()          # endpoint names on the fabric
 
-    def deploy(self, ep: ModelEndpoint, pool_config=None) -> Runtime:
+    def _default_pool_config(self):
+        # model endpoints hold multi-second XLA compiles and weight
+        # loads: a generic 30s keep-alive would reap them between
+        # pipeline stages, so serving defaults to a long retention —
+        # on top of the scheduler-wide pool policy, not replacing it
+        import dataclasses
+        return dataclasses.replace(self.scheduler.pool_config,
+                                   keep_alive=600.0)
+
+    def _ensure_cluster(self, shards: int):
+        if self.cluster is None:
+            from repro.cluster import ClusterRouter
+            # the fabric shares the engine scheduler's predictor:
+            # prediction (chains, periodicity) is global knowledge, so
+            # chain() and trace priming keep working unchanged
+            self.cluster = ClusterRouter.build(
+                shards, policy=self.router_policy,
+                pool_config=self.scheduler.pool_config,
+                predictor=self.scheduler.predictor,
+                spill_timeout=self.spill_timeout)
+        elif shards > self.cluster.num_shards:
+            raise ValueError(
+                f"cluster already built with {self.cluster.num_shards} "
+                f"shards; deploy the widest endpoint first (asked for "
+                f"{shards})")
+        return self.cluster
+
+    def deploy(self, ep: ModelEndpoint, pool_config=None,
+               shards: Optional[int] = None) -> Runtime:
+        """Register an endpoint; with ``shards=N`` (N>1) it joins the
+        sharded fabric: one ``InstancePool`` per shard behind the
+        ``ClusterRouter`` (lazily built at the first sharded deploy),
+        warmth-aware routing and cross-shard freshen included.  Only the
+        shard-0 primary is eagerly initialized — the other shards warm up
+        on demand or by prewarm, which is the point of the fabric."""
         self.endpoints[ep.name] = ep
         if pool_config is None:
-            # model endpoints hold multi-second XLA compiles and weight
-            # loads: a generic 30s keep-alive would reap them between
-            # pipeline stages, so serving defaults to a long retention —
-            # on top of the scheduler-wide pool policy, not replacing it
-            import dataclasses
-            pool_config = dataclasses.replace(self.scheduler.pool_config,
-                                              keep_alive=600.0)
+            pool_config = self._default_pool_config()
+        if shards is not None and shards > 1:
+            cluster = self._ensure_cluster(shards)
+            runtimes = cluster.register(ep.spec(), config=pool_config,
+                                        shards=range(shards))
+            self._clustered.add(ep.name)
+            rt = runtimes[0]
+            rt.init()
+            return rt
         rt = self.scheduler.register(ep.spec(), config=pool_config)
         rt.init()
         return rt
 
+    def _target(self, name: str):
+        if self.cluster is not None and name in self._clustered:
+            return self.cluster
+        return self.scheduler
+
     def invoke(self, name: str, tokens, freshen_successors: bool = True):
-        return self.scheduler.invoke(
+        return self._target(name).invoke(
             name, {"tokens": tokens}, freshen_successors=freshen_successors)
 
     def submit(self, name: str, tokens, freshen_successors: bool = True):
-        """Concurrent admission through the scheduler's router; returns a
-        Future for the endpoint result."""
-        return self.scheduler.submit(
+        """Concurrent admission through the scheduler's router (or the
+        cluster router for sharded endpoints); returns a Future for the
+        endpoint result."""
+        return self._target(name).submit(
             name, {"tokens": tokens}, freshen_successors=freshen_successors)
 
     def chain(self, names: List[str], delay: float = 0.06):
@@ -269,21 +318,40 @@ class ServingEngine:
         periodic endpoints self-prewarm.  Returns ``{name: PoolConfig}``
         for the pools that were retuned."""
         applied = {}
+        schedulers = [self.scheduler]
+        if self.cluster is not None:
+            schedulers += [w.scheduler for w in self.cluster.workers]
         for name in policy.functions:
-            pool = self.scheduler.pools.get(name)
-            if pool is None:
-                continue
-            cfg = policy.pool_config(name, base=pool.config,
-                                     time_scale=time_scale)
-            self.scheduler.apply_pool_config(name, cfg)
-            applied[name] = cfg
+            for sched in schedulers:
+                pool = sched.pools.get(name)
+                if pool is None:
+                    continue
+                cfg = policy.pool_config(name, base=pool.config,
+                                         time_scale=time_scale)
+                sched.apply_pool_config(name, cfg)
+                applied[name] = cfg
+        # one prime covers everything: cluster workers share this predictor
         policy.prime(self.scheduler.predictor, time_scale=time_scale)
         return applied
+
+    def latency_summary(self, app: str) -> dict:
+        """Merged latency view across the base scheduler and every cluster
+        shard (raw-sample merge — percentiles do not compose)."""
+        from repro.cluster import ClusterAccountant
+        accts = [self.scheduler.accountant]
+        if self.cluster is not None:
+            accts += [w.scheduler.accountant for w in self.cluster.workers]
+        return ClusterAccountant(accts).latency_summary(app)
 
     def close(self, wait: bool = True):
         """Shut the scheduler's router down (idempotent); demos and tests
         should call this in a finally block so worker threads never leak."""
         self.scheduler.shutdown(wait=wait)
+        if self.cluster is not None:
+            self.cluster.shutdown(wait=wait)
 
     def platform_stats(self) -> Dict[str, dict]:
-        return self.scheduler.platform_stats()
+        stats = dict(self.scheduler.platform_stats())
+        if self.cluster is not None:
+            stats.update(self.cluster.platform_stats())
+        return stats

@@ -15,7 +15,12 @@ to platform policy:
   feeding (a) recurrence-based next-invocation prediction (prewarm
   timing) and (b) adaptive ``PoolConfig`` (keep-alive / max_instances
   from the observed idle-time distribution and cold-start rate).
+* ``adapt``   — ``AdaptDaemon``: the adaptation loop as a background
+  thread — periodic ``latency_summary`` snapshots through
+  ``HistoryPolicy.adapt`` into live ``apply_pool_config``, per scheduler
+  (or per cluster shard).
 """
+from repro.workloads.adapt import AdaptDaemon  # noqa: F401
 from repro.workloads.history import HistoryPolicy  # noqa: F401
 from repro.workloads.replay import ReplayReport, TraceReplayer  # noqa: F401
 from repro.workloads.trace import (FunctionProfile, InvocationEvent,  # noqa: F401

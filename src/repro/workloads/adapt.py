@@ -1,0 +1,103 @@
+"""AdaptDaemon — the online adaptation loop as a background thread.
+
+PR 2 made adaptation *possible* (``HistoryPolicy.adapt`` turns an
+``Accountant.latency_summary`` into a widened ``PoolConfig``) but left it
+caller-driven.  This daemon closes the loop unattended: every
+``interval`` seconds it snapshots each scheduler's per-app latency
+summary, asks the policy whether any pool's cold-start rate still
+exceeds target, and live-applies the widened config through
+``FreshenScheduler.apply_pool_config``.
+
+It adapts one scheduler or many — hand it a cluster's per-shard
+schedulers (``[w.scheduler for w in router.workers]``) and each shard is
+retuned against *its own* ledger: a shard the router keeps hot widens
+retention while an idle shard keeps the lean config, which is exactly the
+per-placement sizing a merged ledger would blur away.
+
+``step()`` runs one pass synchronously (tests and benchmarks call it
+directly); ``start()``/``stop()`` manage the thread.  The daemon is also
+a context manager.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Iterable, List, Tuple, Union
+
+from repro.core.pool import PoolConfig
+from repro.core.scheduler import FreshenScheduler
+
+from repro.workloads.history import HistoryPolicy
+
+
+class AdaptDaemon:
+    """Periodic latency-summary -> HistoryPolicy.adapt -> pool reconfig."""
+
+    def __init__(self,
+                 schedulers: Union[FreshenScheduler,
+                                   Iterable[FreshenScheduler]],
+                 policy: HistoryPolicy,
+                 interval: float = 1.0):
+        if isinstance(schedulers, FreshenScheduler):
+            schedulers = [schedulers]
+        self.schedulers: List[FreshenScheduler] = list(schedulers)
+        self.policy = policy
+        self.interval = interval
+        self.passes = 0
+        self.adaptations = 0
+        self._stop = threading.Event()
+        self._thread: threading.Thread = None
+
+    # ------------------------------------------------------------------
+    def step(self) -> Dict[Tuple[int, str], PoolConfig]:
+        """One adaptation pass over every scheduler: returns the configs
+        that were applied, keyed ``(scheduler_index, fn)``.  Summaries are
+        snapshotted per app once per scheduler (pools of one app share a
+        ledger), then each pool is adapted against its app's summary."""
+        applied: Dict[Tuple[int, str], PoolConfig] = {}
+        for idx, sched in enumerate(self.schedulers):
+            summaries: Dict[str, dict] = {}
+            for fn, pool in list(sched.pools.items()):
+                app = pool.spec.app
+                if app not in summaries:
+                    summaries[app] = sched.accountant.latency_summary(app)
+                cfg = self.policy.adapt(fn, summaries[app], pool.config)
+                if (cfg.keep_alive == pool.config.keep_alive
+                        and cfg.max_instances == pool.config.max_instances):
+                    continue
+                sched.apply_pool_config(fn, cfg)
+                applied[(idx, fn)] = cfg
+        self.passes += 1
+        self.adaptations += len(applied)
+        return applied
+
+    def _run(self):
+        while not self._stop.wait(self.interval):
+            self.step()
+
+    # ------------------------------------------------------------------
+    def start(self) -> "AdaptDaemon":
+        if self._thread is not None and self._thread.is_alive():
+            return self
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._run,
+                                        name="adapt-daemon", daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self, wait: bool = True):
+        self._stop.set()
+        th = self._thread
+        if wait and th is not None:
+            th.join()
+        self._thread = None
+
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def __enter__(self) -> "AdaptDaemon":
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop()
+        return False

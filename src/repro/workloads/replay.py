@@ -1,9 +1,16 @@
-"""TraceReplayer — open-loop replay of a Trace against the scheduler.
+"""TraceReplayer — open-loop replay of a Trace against the platform.
 
 Arrivals fire at ``t0 + event.t * time_scale`` regardless of how the
 platform is keeping up (open loop: a slow platform accumulates queueing
-delay, it does not slow the workload down), via the scheduler's concurrent
-router (``submit`` / ``submit_chain`` for chain-rooted events).
+delay, it does not slow the workload down), via the target's concurrent
+admission (``submit`` / ``submit_chain`` for chain-rooted events).
+
+The replay target is anything speaking the invocation-target protocol —
+``has_function(fn)``, ``submit``, ``submit_chain``, ``prewarm(fn)`` — so
+the same trace replays into one ``FreshenScheduler`` or a whole
+``repro.cluster.ClusterRouter`` unchanged; against a cluster, oracle
+prewarms go through the router's placement decision, exactly where the
+arrival will be routed.
 
 ``oracle_lead`` enables the oracle arm of the benchmark: the replayer
 *knows* the full schedule, so it dispatches a prewarm freshen to the
@@ -17,7 +24,6 @@ from dataclasses import dataclass, field
 from typing import List, Optional
 
 from repro.core.accounting import percentile
-from repro.core.scheduler import FreshenScheduler
 
 from repro.workloads.trace import Trace
 
@@ -35,9 +41,10 @@ class ReplayReport:
 
 
 class TraceReplayer:
-    """Drive ``FreshenScheduler.submit``/``submit_chain`` from a Trace."""
+    """Drive a scheduler's (or cluster's) ``submit``/``submit_chain``
+    from a Trace."""
 
-    def __init__(self, scheduler: FreshenScheduler, trace: Trace,
+    def __init__(self, scheduler, trace: Trace,
                  time_scale: float = 1.0,
                  oracle_lead: Optional[float] = None,
                  args_fn=None, strict: bool = True,
@@ -66,7 +73,7 @@ class TraceReplayer:
 
     def _registered(self, ev) -> bool:
         fns = ev.chain if ev.chain else (ev.fn,)
-        return all(fn in self.scheduler.pools for fn in fns)
+        return all(self.scheduler.has_function(fn) for fn in fns)
 
     def run(self, freshen: bool = True) -> ReplayReport:
         """Replay the whole trace; blocks until every result resolves."""
@@ -90,9 +97,11 @@ class TraceReplayer:
                 continue
             report.lags.append(max(0.0, time.monotonic() - target))
             if kind == "prewarm":
-                # oracle: freshen the pool the arrival will land on,
-                # provisioning off the critical path if it scaled to zero
-                self.scheduler.pools[ev.fn].prewarm_freshen(provision=True)
+                # oracle: freshen the pool the arrival will land on —
+                # through the cluster router's placement decision when the
+                # target is a cluster — provisioning off the critical path
+                # if it scaled to zero
+                self.scheduler.prewarm(ev.fn, provision=True)
                 report.prewarms += 1
                 continue
             args = self.args_fn(ev) if self.args_fn is not None else None

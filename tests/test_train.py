@@ -61,9 +61,13 @@ def test_microbatching_matches_full_batch():
     p2, _, m2 = jax.jit(s2)(params, init_opt_state(params), batch)
     np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
                                rtol=1e-5)
+    # microbatching changes the gradient summation order, so float32
+    # params drift by a few ULP-scale quanta (observed: 1/65536 elements
+    # off by ~3e-5); the tolerance allows reduction-order noise while
+    # still catching a wrong-by-a-factor accumulation bug
     for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
-                                   atol=1e-5, rtol=1e-4)
+                                   atol=5e-5, rtol=5e-4)
 
 
 def test_training_reduces_loss():
