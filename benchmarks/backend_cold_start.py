@@ -1,0 +1,183 @@
+"""Measured cold starts: thread vs subprocess instance backends, freshen
+on vs off.
+
+Every cold-start number the platform reported before this benchmark came
+from a simulated ``time.sleep(cold_start_cost)``.  The subprocess backend
+(repro.core.backend) makes the cost *real*: each instance is a persistent
+worker process, and its cold start is the measured interpreter-spawn +
+module-import + ``init_fn`` time — the components vHive (arXiv/USENIX
+2021) identifies as dominating sandbox cold starts, and the quantity SPES
+(arXiv 2403.17574) tunes provisioning against.
+
+Workload: a single periodic function whose period exceeds the pool
+keep-alive, so every unassisted arrival lands on a scaled-to-zero pool and
+pays the full cold start.  The freshen-on arm dispatches the §3.1 freshen
+hook (``prewarm_provision``) ``LEAD`` seconds ahead of each arrival — the
+paper's timer-trigger window — so the cold start happens *off the critical
+path* and the arrival lands on a warm, freshened instance:
+
+* ``thread/freshen_off``      — seed behavior: every arrival pays the
+  *simulated* ``SIMULATED_COLD`` sleep.
+* ``thread/freshen_on``       — freshen hides the simulated cost.
+* ``subprocess/freshen_off``  — every arrival pays a *measured* process
+  spawn (~hundreds of ms of real interpreter + import work).
+* ``subprocess/freshen_on``   — freshen hides the measured cost: the
+  headline row.  p95 here must sit near the warm service time, far below
+  ``subprocess/freshen_off``.
+
+CSV rows (stdout, via benchmarks/run.py — schema in docs/benchmarks.md):
+``backend_cold_start/<backend>/freshen_<on|off>``; ``us_per_call`` is p95
+end-to-end latency in µs; ``derived`` packs p50us / cold / cold_rate /
+init_ms (the pool's mean *measured* init seconds, in ms) / hits /
+requests.  The human-readable table goes to stderr.
+
+Knobs (env): ``BACKEND_COLD_START_SMOKE=1`` shrinks arrivals and the
+period for CI; ``BACKEND_COLD_START_ARRIVALS`` / ``BACKEND_COLD_START_
+PERIOD`` override directly.
+
+Run: PYTHONPATH=src:. python benchmarks/run.py backend_cold_start
+(direct invocation works too: PYTHONPATH=src python
+benchmarks/backend_cold_start.py — the module re-imports itself under its
+importable name so worker processes can unpickle the function spec).
+"""
+import os
+import sys
+import time
+
+from repro.core import FreshenScheduler, FunctionSpec, PoolConfig, ServiceClass
+from repro.core.freshen import Action, FreshenPlan, PlanEntry
+
+_SMOKE = os.environ.get("BACKEND_COLD_START_SMOKE") == "1"
+ARRIVALS = int(os.environ.get("BACKEND_COLD_START_ARRIVALS",
+                              "3" if _SMOKE else "6"))
+PERIOD = float(os.environ.get("BACKEND_COLD_START_PERIOD",
+                              "2.0" if _SMOKE else "2.4"))
+LEAD = PERIOD * 0.42          # prewarm dispatch ahead of each arrival;
+                              # must exceed the worst-case real spawn
+KEEP_ALIVE = PERIOD * 0.48    # < PERIOD - LEAD: unassisted arrivals always
+                              # find a scaled-to-zero pool; > LEAD: the
+                              # prewarmed instance survives to its arrival
+SIMULATED_COLD = 0.15         # thread-backend sleep (the old simulation)
+FETCH_COST = 0.01             # freshen-plan resource fetch
+BODY_COST = 0.004             # function body proper
+APP = "bench"
+FN = "periodic_fn"
+
+
+# Module-level callables: the subprocess worker unpickles the spec by
+# reference, importing this module (via run.py it is
+# ``benchmarks.backend_cold_start``).
+def _init_fn(runtime):
+    # the import/load half of a real cold start, measured by init
+    import csv            # noqa: F401
+    import decimal        # noqa: F401
+    import sqlite3        # noqa: F401
+    runtime.scope["booted"] = True
+
+
+def _fetch():
+    time.sleep(FETCH_COST)
+    return {"resource": FN}
+
+
+def _make_plan(runtime):
+    return FreshenPlan([PlanEntry("data", Action.FETCH, _fetch)])
+
+
+def _code(ctx, args):
+    data = ctx.fr_fetch(0)
+    time.sleep(BODY_COST)
+    return data["resource"]
+
+
+SPEC = FunctionSpec(FN, _code, plan_factory=_make_plan, app=APP,
+                    init_fn=_init_fn)
+
+
+def _drive(backend: str, freshen_on: bool) -> dict:
+    cfg = PoolConfig(
+        max_instances=2, keep_alive=KEEP_ALIVE,
+        cold_start_cost=(SIMULATED_COLD if backend == "thread" else 0.0),
+        prewarm_provision=True, backend=backend)
+    sched = FreshenScheduler(pool_config=cfg)
+    sched.accountant.service_class[APP] = ServiceClass.LATENCY_SENSITIVE
+    sched.register(SPEC)
+    # open-loop schedule: arrival k at LEAD + k*PERIOD; with freshen on, a
+    # prewarm fires LEAD ahead of each arrival (k*PERIOD) — the §3.3
+    # timer-trigger window, during which the cold start runs off-path
+    events = [("arrive", LEAD + k * PERIOD) for k in range(ARRIVALS)]
+    if freshen_on:
+        events += [("prewarm", float(k * PERIOD)) for k in range(ARRIVALS)]
+    events.sort(key=lambda e: e[1])
+    try:
+        t0 = time.monotonic()
+        futs = []
+        for kind, at in events:
+            delay = t0 + at - time.monotonic()
+            if delay > 0:
+                time.sleep(delay)
+            if kind == "prewarm":
+                sched.prewarm(FN, provision=True)
+            else:
+                futs.append(sched.submit(FN, freshen_successors=False))
+        for f in futs:
+            f.result(timeout=120)
+        pool = sched.pool(FN)
+        summary = sched.accountant.latency_summary(APP)
+        fstats = pool.freshen_stats()
+        summary.update(
+            requests=len(futs),
+            init_seconds=pool.measured_cold_start(),
+            hits=fstats["hits"],
+            inline=fstats["inline"])
+    finally:
+        sched.shutdown()       # always reap router threads + worker procs
+    return summary
+
+
+def _report(backend: str, on: dict, off: dict):
+    out = sys.stderr
+    print(f"\n=== backend: {backend} ({off['requests']} arrivals, "
+          f"period {PERIOD:.1f}s, lead {LEAD:.2f}s) ===", file=out)
+    print(f"{'':12s} {'p50':>9s} {'p95':>9s} {'cold':>5s} "
+          f"{'init(ms)':>9s} {'hits':>5s}", file=out)
+    for label, s in (("freshen OFF", off), ("freshen ON ", on)):
+        print(f"{label:12s} {s['p50']*1e3:8.1f}ms {s['p95']*1e3:8.1f}ms "
+              f"{s['cold_starts']:5d} {s['init_seconds']*1e3:9.1f} "
+              f"{s['hits']:5d}", file=out)
+    kind = "MEASURED (interpreter spawn + imports)" \
+        if backend == "subprocess" else "simulated (configured sleep)"
+    print(f"  cold-start cost here is {kind}; freshen-on hides it: "
+          f"p95 {off['p95']*1e3:.1f}ms -> {on['p95']*1e3:.1f}ms", file=out)
+
+
+def run():
+    """Harness entry (benchmarks/run.py): CSV rows name,us_per_call,derived."""
+    rows = []
+    for backend in ("thread", "subprocess"):
+        off = _drive(backend, freshen_on=False)
+        on = _drive(backend, freshen_on=True)
+        _report(backend, on, off)
+        for label, s in (("off", off), ("on", on)):
+            rows.append((
+                f"backend_cold_start/{backend}/freshen_{label}",
+                f"{s['p95'] * 1e6:.0f}",
+                f"p50us={s['p50']*1e6:.0f};"
+                f"cold={s['cold_starts']};"
+                f"cold_rate={s['cold_start_rate']:.2f};"
+                f"init_ms={s['init_seconds']*1e3:.1f};"
+                f"hits={s['hits']};"
+                f"requests={s['requests']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    # re-import under the importable package name so subprocess workers can
+    # resolve the spec's callables (__main__ does not pickle by reference)
+    _repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    if _repo_root not in sys.path:
+        sys.path.insert(0, _repo_root)
+    from benchmarks import backend_cold_start as _mod
+    print("name,us_per_call,derived")
+    for row in _mod.run():
+        print(",".join(str(x) for x in row))

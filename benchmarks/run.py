@@ -6,15 +6,17 @@ import time
 
 def main() -> None:
     mods = []
-    from benchmarks import (chain_e2e, cluster_scale, fig4_fetch,
-                            fig5_warming, pool_load, prediction_quality,
-                            roofline, table1_triggers, trace_replay)
+    from benchmarks import (backend_cold_start, chain_e2e, cluster_scale,
+                            fig4_fetch, fig5_warming, pool_load,
+                            prediction_quality, roofline, table1_triggers,
+                            trace_replay)
     mods = [("table1_triggers", table1_triggers),
             ("fig4_fetch", fig4_fetch),
             ("fig5_warming", fig5_warming),
             ("chain_e2e", chain_e2e),
             ("prediction_quality", prediction_quality),
             ("pool_load", pool_load),
+            ("backend_cold_start", backend_cold_start),
             ("trace_replay", trace_replay),
             ("cluster_scale", cluster_scale),
             ("roofline", roofline)]

@@ -201,17 +201,20 @@ class ClusterRouter:
 
     def register(self, spec: FunctionSpec,
                  config: Optional[PoolConfig] = None,
-                 shards: Optional[Sequence[int]] = None
+                 shards: Optional[Sequence[int]] = None,
+                 backend: Optional[str] = None
                  ) -> Dict[int, Runtime]:
         """Register a function on every shard (default) or a subset;
         returns the per-shard primary runtimes.  An explicit ``config``
         is copied per shard: pools own their config object (and
         ``reconfigure`` mutates it in place), so sharing one across
-        shards would let adapting shard A silently retune shard B."""
+        shards would let adapting shard A silently retune shard B.
+        ``backend`` selects the instance backend on every target shard."""
         targets = (self.workers if shards is None
                    else [self._by_shard[s] for s in shards])
         return {w.shard_id: w.register(
-                    spec, config=None if config is None else replace(config))
+                    spec, config=None if config is None else replace(config),
+                    backend=backend)
                 for w in targets}
 
     # -- routing --------------------------------------------------------

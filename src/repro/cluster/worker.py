@@ -62,12 +62,22 @@ class ClusterWorker:
         return run_pinned
 
     def register(self, spec: FunctionSpec,
-                 config: Optional[PoolConfig] = None) -> Runtime:
+                 config: Optional[PoolConfig] = None,
+                 backend: Optional[str] = None) -> Runtime:
         """Register a function on this shard; its pool is shard-tagged so
-        saturation errors name the shard."""
+        saturation errors name the shard.  ``backend`` selects the
+        instance backend (repro.core.backend); device pinning wraps the
+        function body in a closure and therefore requires the in-process
+        thread backend."""
         if self.devices:
+            chosen = backend or (config.backend if config
+                                 else self.scheduler.pool_config.backend)
+            if chosen != "thread":
+                raise ValueError(
+                    f"shard {self.shard_id} pins jax devices, which "
+                    f"requires the thread backend (got {chosen!r})")
             spec = dataclasses.replace(spec, code=self._pinned(spec.code))
-        rt = self.scheduler.register(spec, config=config)
+        rt = self.scheduler.register(spec, config=config, backend=backend)
         self.scheduler.pools[spec.name].shard = self.shard_id
         return rt
 

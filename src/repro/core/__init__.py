@@ -3,6 +3,9 @@ surrounding platform machinery (prediction, scheduling, accounting,
 inference, triggers).  Model-agnostic; binds to JAX via repro.serving."""
 from repro.core.accounting import (Accountant, AppBill, ServiceClass,  # noqa: F401
                                    percentile)
+from repro.core.backend import (BackendError, InstanceBackend,  # noqa: F401
+                                SubprocessBackend, ThreadBackend,
+                                make_backend)
 from repro.core.cache import FreshenCache  # noqa: F401
 from repro.core.pool import (InstancePool, InstanceState, PoolConfig,  # noqa: F401
                              PooledInstance, PoolSaturated)

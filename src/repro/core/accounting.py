@@ -20,9 +20,9 @@ import math
 import threading
 import time
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from enum import Enum
-from typing import Dict, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 
 def _percentile_sorted(vals: Sequence[float], q: float) -> float:
@@ -83,7 +83,10 @@ class Accountant:
         self.disable_miss_rate = disable_miss_rate
         self.latency_window = latency_window
         self._bills: Dict[str, AppBill] = {}
-        self._pending: Dict[str, list] = {}       # fn -> [freshen_ts, ...]
+        # fn -> [(anchor_ts, owning app), ...]; the anchor is the
+        # predicted arrival time, the app is who gets billed when the
+        # prediction resolves (useful or mispredicted)
+        self._pending: Dict[str, List[Tuple[float, str]]] = {}
         # bounded sliding windows (deque maxlen) so a long-running platform
         # never accumulates unbounded per-invocation samples
         self._latencies: Dict[str, deque] = {}           # app -> e2e seconds
@@ -96,12 +99,15 @@ class Accountant:
             return self._bills.setdefault(app, AppBill())
 
     def peek_bill(self, app: str) -> AppBill:
-        """Read-only view: the app's bill, or an empty unattached one.
-        Unlike ``bill`` this never inserts into the ledger, so cluster
-        aggregation and monitoring loops can poll arbitrary app names
-        without growing every shard's ``_bills`` with phantom entries."""
+        """Read-only view: a *copy* of the app's bill, or an empty
+        unattached one.  Unlike ``bill`` this never inserts into the
+        ledger, so cluster aggregation and monitoring loops can poll
+        arbitrary app names without growing every shard's ``_bills`` with
+        phantom entries — and because it is a snapshot, mutating the
+        returned object can never corrupt the live ledger."""
         with self._lock:
-            return self._bills.get(app) or AppBill()
+            b = self._bills.get(app)
+            return replace(b) if b is not None else AppBill()
 
     # ------------------------------------------------------------------
     def record_freshen(self, app: str, fn: str, seconds: float,
@@ -118,7 +124,8 @@ class Accountant:
             b = self._bills.setdefault(app, AppBill())
             b.freshen_seconds += seconds
             b.freshen_invocations += 1
-            self._pending.setdefault(fn, []).append(now + expected_delay)
+            self._pending.setdefault(fn, []).append(
+                (now + expected_delay, app))
 
     def record_invocation(self, app: str, fn: str, seconds: float,
                           now: Optional[float] = None, *,
@@ -139,12 +146,39 @@ class Accountant:
                     seconds + queue_delay)
             self._queue_delays.setdefault(
                 app, deque(maxlen=self.latency_window)).append(queue_delay)
-            pend = self._pending.get(fn, [])
-            matched = [t for t in pend if now - t <= self.horizon]
-            expired = [t for t in pend if now - t > self.horizon]
-            b.useful_freshens += len(matched)
-            b.mispredicted_freshens += len(expired)
-            self._pending[fn] = []
+            self._resolve_pending_locked(fn, now)
+
+    def _resolve_pending_locked(self, fn: str, now: float):
+        """One arrival resolves at most ONE pending freshen: the anchor
+        nearest ``now`` within the misprediction horizon is credited as
+        useful; anchors whose horizon has long passed are billed as
+        mispredictions; future-anchored entries (more than ``horizon``
+        ahead, e.g. a 60s-period timer prewarm) stay pending — an
+        unrelated immediate arrival must neither consume nor discard
+        them.  Useful/mispredicted counts are billed to the app recorded
+        when the freshen was dispatched."""
+        pend = self._pending.get(fn)
+        if not pend:
+            return
+        keep: List[Tuple[float, str]] = []
+        for ts, owner in pend:
+            if now - ts > self.horizon:            # anchor long past: missed
+                self._bills.setdefault(
+                    owner, AppBill()).mispredicted_freshens += 1
+            else:
+                keep.append((ts, owner))
+        best_i, best_d = -1, None
+        for i, (ts, _owner) in enumerate(keep):
+            d = abs(now - ts)
+            if d <= self.horizon and (best_d is None or d < best_d):
+                best_i, best_d = i, d
+        if best_i >= 0:
+            _ts, owner = keep.pop(best_i)
+            self._bills.setdefault(owner, AppBill()).useful_freshens += 1
+        if keep:
+            self._pending[fn] = keep
+        else:
+            self._pending.pop(fn, None)
 
     def latency_samples(self, app: str) -> list:
         """Raw end-to-end latency samples (seconds, unsorted) in the
@@ -188,15 +222,27 @@ class Accountant:
             "cold_start_rate": cold / invocations if invocations else 0.0,
         }
 
-    def sweep_expired(self, app: str, now: Optional[float] = None):
-        """Charge freshens whose function never arrived as mispredictions."""
+    def sweep_expired(self, app: Optional[str] = None,
+                      now: Optional[float] = None):
+        """Charge freshens whose function never arrived as mispredictions.
+        Each expiration is billed to the app recorded when the freshen was
+        dispatched (``record_freshen`` knows the owner), never to whoever
+        happens to run the sweep; the ``app`` argument is kept only for
+        backward compatibility and is ignored."""
         now = time.monotonic() if now is None else now
         with self._lock:
-            b = self._bills.setdefault(app, AppBill())
-            for fn, pend in self._pending.items():
-                expired = [t for t in pend if now - t > self.horizon]
-                b.mispredicted_freshens += len(expired)
-                self._pending[fn] = [t for t in pend if now - t <= self.horizon]
+            for fn, pend in list(self._pending.items()):
+                keep: List[Tuple[float, str]] = []
+                for ts, owner in pend:
+                    if now - ts > self.horizon:
+                        self._bills.setdefault(
+                            owner, AppBill()).mispredicted_freshens += 1
+                    else:
+                        keep.append((ts, owner))
+                if keep:
+                    self._pending[fn] = keep
+                else:
+                    self._pending.pop(fn, None)
 
     # ------------------------------------------------------------------
     def should_freshen(self, app: str, confidence: float) -> bool:

@@ -1,0 +1,286 @@
+"""Pluggable instance backends — *where* a container's hooks execute.
+
+The seed platform simulated sandbox creation with ``time.sleep(
+cold_start_cost)`` inside ``Runtime.init``.  Real serverless cold starts
+are dominated by interpreter startup plus import/load work (vHive,
+Ustiugov et al. 2021), and provisioning policies are tuned against
+*measured* startup cost (SPES, Lee et al. 2024).  This module makes the
+execution substrate a policy choice:
+
+* ``ThreadBackend`` — the seed behavior: hooks run in-process, cold-start
+  cost is the configured simulated sleep.  Default, zero-dependency, and
+  the only backend that supports shared scope groups (one process, one
+  heap).
+* ``SubprocessBackend`` — each instance's ``init``/``run``/``freshen``
+  hooks execute in a persistent worker process
+  (``python -m repro.core.backend_worker``) over a length-prefixed pickle
+  pipe protocol on stdin/stdout.  The cold start is then the *measured*
+  interpreter-spawn + module-import + ``init_fn`` time, and
+  ``InstancePool.measured_cold_start`` feeds that number back into
+  warmth/retention policy (``HistoryPolicy.adapt``).
+
+A backend instance is per-``Runtime`` (it owns the worker process);
+selection is per-pool via ``PoolConfig.backend`` and threads through
+``FreshenScheduler.register(..., backend=...)``,
+``ClusterWorker.register(..., backend=...)`` and
+``ServingEngine.deploy(..., backend=...)``.
+
+Subprocess function specs must be *reconstructable in the worker*: either
+every callable on the ``FunctionSpec`` is picklable by reference (defined
+at module scope in an importable module), or ``FunctionSpec.ref`` names a
+``"module:attr"`` that resolves — in the worker — to the spec or to a
+zero-argument factory returning it (the escape hatch for closure-built
+specs and endpoints holding unpicklable state).
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import struct
+import subprocess
+import sys
+import threading
+import time
+from typing import Any, BinaryIO, Dict, Optional
+
+from repro.core.freshen import FreshenPlan, FreshenState
+
+_FRESHEN_STAT_KEYS = ("freshened", "inline", "waits", "hits")
+
+
+class BackendError(RuntimeError):
+    """A backend could not execute a hook (worker died, spec not
+    shippable, remote hook raised)."""
+
+
+# ----------------------------------------------------------------------
+# Pipe framing shared with repro.core.backend_worker: 4-byte big-endian
+# length + pickled ``(tag, payload)`` tuple.
+def write_frame(stream: BinaryIO, obj: Any) -> None:
+    blob = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+    stream.write(struct.pack("!I", len(blob)))
+    stream.write(blob)
+    stream.flush()
+
+
+def read_frame(stream: BinaryIO) -> Optional[Any]:
+    """One framed message, or None on EOF/short read (peer gone)."""
+    header = stream.read(4)
+    if len(header) < 4:
+        return None
+    (n,) = struct.unpack("!I", header)
+    data = b""
+    while len(data) < n:
+        chunk = stream.read(n - len(data))
+        if not chunk:
+            return None
+        data += chunk
+    return pickle.loads(data)
+
+
+# ----------------------------------------------------------------------
+class InstanceBackend:
+    """The execution substrate for one Runtime's hooks.
+
+    ``Runtime`` keeps lifecycle bookkeeping (init lock, freshen threads,
+    counters) and delegates the actual work here:
+
+    * ``boot(runtime)``    — perform the cold start (called once, under the
+      runtime's init lock).  On return the instance must be servable.
+    * ``run(runtime, args)``      — execute the run hook, returning the
+      function result.
+    * ``freshen(runtime)``        — execute the freshen hook to completion
+      (Algorithm 2); called from a background thread by ``Runtime.freshen``
+      so non-blocking dispatch semantics live above this layer.
+    * ``freshen_stats(runtime)``  — the instance's fr_state counters
+      (``freshened``/``inline``/``waits``/``hits``), or None before boot.
+    * ``close()``          — release the substrate (terminate the worker
+      process); idempotent.
+    """
+
+    name = "abstract"
+
+    def boot(self, runtime) -> None:
+        raise NotImplementedError
+
+    def run(self, runtime, args: Any) -> Any:
+        raise NotImplementedError
+
+    def freshen(self, runtime) -> Optional[dict]:
+        raise NotImplementedError
+
+    def freshen_stats(self, runtime) -> Optional[dict]:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        pass
+
+
+class ThreadBackend(InstanceBackend):
+    """In-process execution — the seed behavior.  Cold start is the
+    configured simulated ``cold_start_cost`` sleep plus ``init_fn``."""
+
+    name = "thread"
+
+    def boot(self, runtime) -> None:
+        if runtime.cold_start_cost:
+            time.sleep(runtime.cold_start_cost)
+        if runtime.spec.init_fn:
+            runtime.spec.init_fn(runtime)
+        plan = (runtime.spec.plan_factory(runtime)
+                if runtime.spec.plan_factory else FreshenPlan([]))
+        runtime.fr_state = FreshenState(plan, clock=runtime.clock)
+
+    def run(self, runtime, args: Any) -> Any:
+        from repro.core.runtime import RunContext
+        return runtime.spec.code(RunContext(runtime), args)
+
+    def freshen(self, runtime) -> Optional[dict]:
+        return runtime.fr_state.freshen()
+
+    def freshen_stats(self, runtime) -> Optional[dict]:
+        if runtime.fr_state is None:
+            return None
+        return runtime.fr_state.stats()
+
+
+class SubprocessBackend(InstanceBackend):
+    """One persistent worker process per instance; hooks run remotely.
+
+    The worker is spawned in ``boot`` (that *is* the cold start: interpreter
+    exec + repro import + spec import + ``init_fn``), then serves
+    ``run``/``freshen``/``stats`` commands over the pipe until ``close``.
+    Commands are serialized by a lock — within one instance the hooks run
+    one at a time, exactly like a single-core sandbox; concurrency comes
+    from the pool holding many instances.  Function arguments and results
+    must be picklable.
+
+    The parent-side ``Runtime.fr_state`` stays ``None`` (the real fr_state
+    lives in the worker); pool introspection goes through
+    ``freshen_stats``, which round-trips to the worker and caches the last
+    answer so a dead worker still reports its lifetime counters.
+    """
+
+    name = "subprocess"
+
+    def __init__(self, python: Optional[str] = None):
+        self.python = python or sys.executable
+        self._proc: Optional[subprocess.Popen] = None
+        self._lock = threading.RLock()
+        self._stats_cache: Optional[dict] = None
+        self.worker_init_seconds = 0.0     # init_fn+plan time inside worker
+        self.spawn_seconds = 0.0           # full measured cold start
+
+    # -- protocol ------------------------------------------------------
+    def _call(self, cmd: str, payload: Any) -> Any:
+        with self._lock:
+            proc = self._proc
+            if proc is None or proc.poll() is not None:
+                raise BackendError(
+                    f"subprocess backend worker is not running "
+                    f"(command {cmd!r})")
+            write_frame(proc.stdin, (cmd, payload))
+            msg = read_frame(proc.stdout)
+        if msg is None:
+            raise BackendError(
+                f"subprocess backend worker died during {cmd!r} "
+                f"(exit code {proc.poll()})")
+        tag, body = msg
+        if tag == "err":
+            raise BackendError(
+                f"worker hook {cmd!r} failed remotely:\n{body}")
+        return body
+
+    def _spec_payload(self, spec) -> Dict[str, Any]:
+        if spec.ref:
+            return {"spec_ref": spec.ref}
+        try:
+            return {"spec_pickle": pickle.dumps(
+                spec, protocol=pickle.HIGHEST_PROTOCOL)}
+        except Exception as exc:
+            raise BackendError(
+                f"FunctionSpec {spec.name!r} is not picklable ({exc}); the "
+                f"subprocess backend needs module-level callables or a "
+                f"FunctionSpec.ref='module:attr' the worker can import "
+                f"(or use the thread backend)") from exc
+
+    # -- InstanceBackend -----------------------------------------------
+    def boot(self, runtime) -> None:
+        payload = self._spec_payload(runtime.spec)
+        payload["sys_path"] = [p for p in sys.path if p]
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.pathsep.join(payload["sys_path"])
+        self.close()         # a failed earlier boot must not leak a worker
+        t0 = time.monotonic()
+        try:
+            with self._lock:
+                self._proc = subprocess.Popen(
+                    [self.python, "-m", "repro.core.backend_worker"],
+                    stdin=subprocess.PIPE, stdout=subprocess.PIPE, env=env)
+                reply = self._call("init", payload)
+        except BaseException:
+            self.close()     # remote init failed: reap the spawned worker
+            raise
+        self.worker_init_seconds = reply.get("init_seconds", 0.0)
+        self.spawn_seconds = time.monotonic() - t0
+
+    def run(self, runtime, args: Any) -> Any:
+        return self._call("run", args)
+
+    def freshen(self, runtime) -> Optional[dict]:
+        stats = self._call("freshen", None)
+        if isinstance(stats, dict):
+            self._stats_cache = {k: stats.get(k, 0)
+                                 for k in _FRESHEN_STAT_KEYS}
+        return stats
+
+    def freshen_stats(self, runtime) -> Optional[dict]:
+        if self._proc is None:
+            return self._stats_cache
+        try:
+            stats = self._call("stats", None)
+        except BackendError:
+            return self._stats_cache
+        self._stats_cache = {k: stats.get(k, 0) for k in _FRESHEN_STAT_KEYS}
+        return dict(self._stats_cache)
+
+    def close(self) -> None:
+        with self._lock:
+            proc, self._proc = self._proc, None
+            if proc is None or proc.poll() is not None:
+                return
+            try:
+                write_frame(proc.stdin, ("exit", None))
+                proc.stdin.close()
+            except (BrokenPipeError, OSError, ValueError):
+                pass
+        try:
+            proc.wait(timeout=5.0)
+        except subprocess.TimeoutExpired:
+            proc.kill()
+            proc.wait()
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:
+            pass
+
+
+# ----------------------------------------------------------------------
+BACKENDS: Dict[str, type] = {
+    ThreadBackend.name: ThreadBackend,
+    SubprocessBackend.name: SubprocessBackend,
+}
+
+
+def make_backend(backend: str) -> InstanceBackend:
+    """Instantiate a registered backend by name (``PoolConfig.backend``).
+    The registry is open: tests and deployments may add entries."""
+    try:
+        cls = BACKENDS[backend]
+    except KeyError:
+        raise ValueError(
+            f"unknown instance backend {backend!r}; "
+            f"known: {sorted(BACKENDS)}") from None
+    return cls()

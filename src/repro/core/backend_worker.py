@@ -1,0 +1,103 @@
+"""The subprocess-backend worker: one sandboxed instance per process.
+
+Spawned by ``repro.core.backend.SubprocessBackend`` as
+``python -m repro.core.backend_worker``.  Speaks the length-prefixed
+pickle frame protocol on stdin/stdout: the parent sends ``(cmd, payload)``
+and gets back ``("ok", result)`` or ``("err", traceback_text)``.
+
+Commands:
+
+* ``init``    — extend ``sys.path``, materialize the ``FunctionSpec``
+  (``spec_ref`` = ``"module:attr"`` resolving to a spec or a zero-arg
+  factory, else ``spec_pickle`` bytes), build a thread-backed ``Runtime``
+  and run its init hook.  The wall time the *parent* measures around this
+  round-trip — interpreter exec, imports, ``init_fn`` — is the real cold
+  start.
+* ``run``     — execute the run hook with the unpickled args.
+* ``freshen`` — execute the freshen hook (Algorithm 2) to completion.
+* ``stats``   — fr_state counters plus run/freshen hook counts.
+* ``exit``    — acknowledge and terminate.  EOF on stdin (parent gone)
+  also terminates, so workers never outlive their platform.
+
+File descriptor 1 is re-pointed at stderr before any user code runs: a
+function body that prints can never corrupt the protocol stream.
+"""
+from __future__ import annotations
+
+import importlib
+import os
+import pickle
+import sys
+import traceback
+
+
+def _resolve_spec(payload):
+    from repro.core.runtime import FunctionSpec
+    ref = payload.get("spec_ref")
+    if ref:
+        mod_name, _, attr = ref.partition(":")
+        if not mod_name or not attr:
+            raise ValueError(f"spec_ref must be 'module:attr', got {ref!r}")
+        obj = getattr(importlib.import_module(mod_name), attr)
+        if not isinstance(obj, FunctionSpec):
+            obj = obj()
+        if not isinstance(obj, FunctionSpec):
+            raise TypeError(f"spec_ref {ref!r} did not yield a FunctionSpec")
+        return obj
+    return pickle.loads(payload["spec_pickle"])
+
+
+def main() -> int:
+    # claim the protocol channel, then point fd 1 at stderr so user-code
+    # prints (and library chatter) land in the parent's stderr instead
+    proto_out = os.fdopen(os.dup(sys.stdout.fileno()), "wb")
+    os.dup2(sys.stderr.fileno(), sys.stdout.fileno())
+    proto_in = sys.stdin.buffer
+
+    from repro.core.backend import read_frame, write_frame
+
+    runtime = None
+    while True:
+        msg = read_frame(proto_in)
+        if msg is None:                      # parent closed the pipe
+            break
+        cmd, payload = msg
+        try:
+            if cmd == "init":
+                for p in payload.get("sys_path", []):
+                    if p and p not in sys.path:
+                        sys.path.append(p)
+                spec = _resolve_spec(payload)
+                from repro.core.runtime import Runtime
+                runtime = Runtime(spec)      # thread-backed inside the worker
+                runtime.init()
+                write_frame(proto_out, ("ok", {
+                    "init_seconds": runtime.init_seconds,
+                    "plan_len": len(runtime.fr_state.plan),
+                    "pid": os.getpid(),
+                }))
+            elif cmd == "run":
+                write_frame(proto_out, ("ok", runtime.run(payload)))
+            elif cmd == "freshen":
+                runtime.freshen(blocking=True)
+                write_frame(proto_out, ("ok", runtime.fr_state.stats()))
+            elif cmd == "stats":
+                stats = dict(runtime.fr_state.stats())
+                stats["run_count"] = runtime.run_count
+                stats["freshen_count"] = runtime.freshen_count
+                write_frame(proto_out, ("ok", stats))
+            elif cmd == "exit":
+                write_frame(proto_out, ("ok", None))
+                break
+            else:
+                write_frame(proto_out, ("err", f"unknown command {cmd!r}"))
+        except BaseException:
+            try:
+                write_frame(proto_out, ("err", traceback.format_exc()))
+            except BrokenPipeError:
+                break
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -36,6 +36,7 @@ from dataclasses import dataclass, field, fields, replace
 from enum import Enum
 from typing import Callable, Dict, List, Optional, Tuple
 
+from repro.core.backend import make_backend
 from repro.core.runtime import FunctionSpec, Runtime
 
 
@@ -45,12 +46,17 @@ class PoolConfig:
     max_instances: int = 4
     keep_alive: float = 30.0          # idle seconds before an instance is reaped
     cold_start_cost: float = 0.0      # simulated sandbox-creation seconds
+                                      # (thread backend only; the subprocess
+                                      # backend's cold start is measured)
     scale_up_queue_depth: int = 1     # waiters needed before scaling up (>=1)
     prewarm_provision: bool = False   # cold-start a fresh instance for prewarm
     prewarm_fanout: int = 1           # idle instances to freshen per dispatch
     prewarm_busy_fallback: bool = True  # no idle instance: freshen a busy one
                                         # (seed behavior — fr_state is
                                         # thread-safe under the run hook)
+    backend: str = "thread"           # instance backend (repro.core.backend);
+                                      # a live change applies to instances
+                                      # provisioned after it
 
 
 class InstanceState(Enum):
@@ -107,7 +113,8 @@ class InstancePool:
         self.shard: Optional[int] = None
         self._factory = runtime_factory or (
             lambda: Runtime(spec, cold_start_cost=self.config.cold_start_cost,
-                            clock=clock))
+                            clock=clock,
+                            backend=make_backend(self.config.backend)))
         self._cond = threading.Condition()
         self._instances: Dict[int, PooledInstance] = {}
         self._idle: List[PooledInstance] = []     # LIFO stack
@@ -124,6 +131,9 @@ class InstancePool:
         # reap() so freshen_stats() is a lifetime view, not survivors-only
         self._reaped_freshen_stats = {"freshened": 0, "inline": 0,
                                       "waits": 0, "hits": 0}
+        # measured init seconds of reaped instances: [sum, count] — keeps
+        # measured_cold_start() a lifetime mean across instance churn
+        self._reaped_init = [0.0, 0]
         with self._cond:
             for _ in range(eager_instances):
                 self._create_locked()
@@ -221,13 +231,49 @@ class InstancePool:
             for inst in dead:
                 inst.state = InstanceState.REAPED
                 del self._instances[inst.instance_id]
-                if inst.runtime.fr_state is not None:
-                    for k, v in inst.runtime.fr_state.stats().items():
-                        self._reaped_freshen_stats[k] += v
             self.reaped += len(dead)
-        for inst in dead:
-            inst.runtime.join_freshen(timeout=0.0)
+        self._fold_and_close(dead, join_timeout=0.0)
         return len(dead)
+
+    def _fold_and_close(self, dead: List[PooledInstance],
+                        join_timeout: Optional[float] = 0.0):
+        """Fold dying instances' lifetime counters into the pool and close
+        their runtimes (terminating subprocess backend workers).  Runs
+        outside the pool lock: a subprocess backend's stats query is a
+        pipe round-trip and must never stall acquires."""
+        folded: List[dict] = []
+        init_s, init_n = 0.0, 0
+        for inst in dead:
+            inst.runtime.join_freshen(timeout=join_timeout)
+            stats = inst.runtime.freshen_stats()
+            if stats:
+                folded.append(stats)
+            if inst.runtime.initialized:
+                init_s += inst.runtime.init_seconds
+                init_n += 1
+            inst.runtime.close()
+        if not dead:
+            return
+        with self._cond:
+            for stats in folded:
+                for k in self._reaped_freshen_stats:
+                    self._reaped_freshen_stats[k] += stats.get(k, 0)
+            self._reaped_init[0] += init_s
+            self._reaped_init[1] += init_n
+
+    def close(self):
+        """Shut the pool down: evict every idle instance regardless of
+        keep-alive and close its runtime (terminating subprocess backend
+        workers).  Busy instances are left to their in-flight invocation —
+        drain first (``FreshenScheduler.shutdown(wait=True)`` does).  The
+        pool stays usable: a later acquire provisions fresh instances."""
+        with self._cond:
+            dead, self._idle = self._idle, []
+            for inst in dead:
+                inst.state = InstanceState.REAPED
+                del self._instances[inst.instance_id]
+            self.reaped += len(dead)
+        self._fold_and_close(dead, join_timeout=5.0)
 
     def _pop_warmest_locked(self) -> PooledInstance:
         """Warmth-aware LIFO: prefer the most recently used *initialized*
@@ -383,13 +429,36 @@ class InstancePool:
             agg = dict(self._reaped_freshen_stats)
             runtimes = [i.runtime for i in self._instances.values()]
         for rt in runtimes:
-            if rt.fr_state is not None:
-                for k, v in rt.fr_state.stats().items():
-                    agg[k] += v
+            stats = rt.freshen_stats()
+            if stats:
+                for k in agg:
+                    agg[k] += stats.get(k, 0)
         return agg
+
+    def _measured_init_locked(self) -> Tuple[float, int]:
+        """(sum, count) of measured init seconds: reaped fold + live
+        initialized instances.  Callers hold ``_cond``."""
+        total, n = self._reaped_init
+        for inst in self._instances.values():
+            if inst.runtime.initialized:
+                total += inst.runtime.init_seconds
+                n += 1
+        return total, n
+
+    def measured_cold_start(self) -> float:
+        """Mean *measured* init seconds over every instance this pool ever
+        initialized (live + reaped).  Under the subprocess backend this is
+        real interpreter-spawn + import + init_fn time — the number
+        retention policy should trade against (``HistoryPolicy.adapt``
+        floors keep-alive at it).  Falls back to the configured
+        ``cold_start_cost`` before anything has booted."""
+        with self._cond:
+            total, n = self._measured_init_locked()
+        return total / n if n else self.config.cold_start_cost
 
     def stats(self) -> dict:
         with self._cond:
+            total, n = self._measured_init_locked()
             return {
                 "instances": len(self._instances),
                 "idle": len(self._idle),
@@ -400,4 +469,6 @@ class InstancePool:
                 "reaped": self.reaped,
                 "prewarm_dispatches": self.prewarm_dispatches,
                 "prewarm_provisioned": self.prewarm_provisioned,
+                "backend": self.config.backend,
+                "measured_init_mean": total / n if n else 0.0,
             }

@@ -17,6 +17,14 @@ concurrently (an invocation on the run hook while a prewarm freshen runs
 in its own thread), ``init`` is idempotent and guarded by a lock, and the
 non-blocking freshen hook performs initialization inside its background
 thread so a prewarm-provisioned cold start never blocks the dispatcher.
+
+*Where* the hooks execute is delegated to an ``InstanceBackend``
+(repro.core.backend): the default ``ThreadBackend`` runs them in-process
+(cold start = the simulated ``cold_start_cost`` sleep), while the
+``SubprocessBackend`` runs them in a persistent worker process so
+``init_seconds`` is the *measured* interpreter-spawn + import + init_fn
+time.  The Runtime keeps the lifecycle bookkeeping — init lock, freshen
+threads, counters — identical across backends.
 """
 from __future__ import annotations
 
@@ -43,6 +51,10 @@ class FunctionSpec:
     plan_factory: Optional[Callable[["Runtime"], FreshenPlan]] = None
     app: str = "default"
     init_fn: Optional[Callable[["Runtime"], None]] = None
+    # subprocess-backend escape hatch: "module:attr" resolving — in the
+    # worker process — to this spec or to a zero-arg factory returning
+    # it, for specs whose callables are closures and cannot pickle
+    ref: Optional[str] = None
 
 
 class RunContext:
@@ -64,7 +76,8 @@ class Runtime:
 
     def __init__(self, spec: FunctionSpec,
                  cold_start_cost: float = 0.0,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 backend: Optional["InstanceBackend"] = None):
         self.spec = spec
         self.clock = clock
         self.scope: Dict[str, Any] = {}            # runtime-scoped variables
@@ -72,6 +85,10 @@ class Runtime:
         self.initialized = False
         self.cold_start_cost = cold_start_cost
         self.fr_state: Optional[FreshenState] = None
+        if backend is None:
+            from repro.core.backend import ThreadBackend
+            backend = ThreadBackend()
+        self.backend = backend
         self._freshen_threads: list[threading.Thread] = []
         self._threads_lock = threading.Lock()
         self._init_lock = threading.Lock()
@@ -83,18 +100,15 @@ class Runtime:
     def init(self):
         """The init hook: start runtime, load code, build the freshen plan.
         Idempotent and thread-safe — a pooled instance may be initialized
-        by whichever of run/freshen reaches it first."""
+        by whichever of run/freshen reaches it first.  The work is the
+        backend's (thread: simulated cold start in-process; subprocess:
+        spawn the worker interpreter); ``init_seconds`` is measured here
+        around whatever the backend actually did."""
         with self._init_lock:
             if self.initialized:
                 return
             t0 = self.clock()
-            if self.cold_start_cost:
-                time.sleep(self.cold_start_cost)
-            if self.spec.init_fn:
-                self.spec.init_fn(self)
-            plan = (self.spec.plan_factory(self) if self.spec.plan_factory
-                    else FreshenPlan([]))
-            self.fr_state = FreshenState(plan, clock=self.clock)
+            self.backend.boot(self)
             self.initialized = True
             self.init_seconds = self.clock() - t0
 
@@ -112,7 +126,7 @@ class Runtime:
 
         def _run():
             self._ensure_init()
-            self.fr_state.freshen()
+            self.backend.freshen(self)
 
         if blocking:
             _run()
@@ -128,8 +142,19 @@ class Runtime:
         """The run hook: execute the function (timing unmodified)."""
         self._ensure_init()
         self.run_count += 1
-        ctx = RunContext(self)
-        return self.spec.code(ctx, args)
+        return self.backend.run(self, args)
+
+    def freshen_stats(self) -> Optional[dict]:
+        """This instance's fr_state counters (freshened/inline/waits/hits),
+        wherever they live — in-process for the thread backend, round-
+        tripped from the worker for the subprocess backend.  None before
+        the instance ever booted."""
+        return self.backend.freshen_stats(self)
+
+    def close(self):
+        """Release the execution substrate (terminates a subprocess
+        backend's worker).  Thread backend: no-op.  Idempotent."""
+        self.backend.close()
 
     def freshen_in_flight(self) -> bool:
         """True while a non-blocking freshen hook is still running."""

@@ -32,6 +32,7 @@ from dataclasses import dataclass, field, replace
 from typing import Callable, Deque, Dict, List, Optional
 
 from repro.core.accounting import Accountant
+from repro.core.backend import make_backend
 from repro.core.pool import InstancePool, PoolConfig
 from repro.core.prediction import HybridPredictor, Prediction
 from repro.core.runtime import FunctionSpec, Runtime
@@ -108,7 +109,8 @@ class FreshenScheduler:
     # ------------------------------------------------------------------
     def register(self, spec: FunctionSpec, runtime: Optional[Runtime] = None,
                  scope_group: Optional[str] = None,
-                 config: Optional[PoolConfig] = None) -> Runtime:
+                 config: Optional[PoolConfig] = None,
+                 backend: Optional[str] = None) -> Runtime:
         """Create the function's instance pool (with one eager instance so
         the seed-era single-runtime API keeps working) and return its
         primary runtime.
@@ -118,13 +120,25 @@ class FreshenScheduler:
         isolation): one ``scope`` dict and one ``FreshenCache``, so a
         resource freshened for any member is visible to all of them.
         Every instance the pool ever creates joins the shared scope; each
-        keeps its own fr_state (plans differ per function)."""
+        keeps its own fr_state (plans differ per function).
+
+        ``backend`` overrides the pool config's instance backend
+        (repro.core.backend): "thread" runs hooks in-process, "subprocess"
+        in a persistent worker process with measured cold starts.  Scope
+        groups are in-process state and require the thread backend."""
         # each pool gets its own config copy: tuning one pool must never
         # mutate another's policy through the shared scheduler default
         cfg = config or replace(self.pool_config)
+        if backend is not None and backend != cfg.backend:
+            cfg = replace(cfg, backend=backend)
+        if scope_group is not None and cfg.backend != "thread":
+            raise ValueError(
+                f"scope_group {scope_group!r} shares in-process state and "
+                f"requires the thread backend, not {cfg.backend!r}")
 
         def factory() -> Runtime:
-            rt = Runtime(spec, cold_start_cost=cfg.cold_start_cost)
+            rt = Runtime(spec, cold_start_cost=cfg.cold_start_cost,
+                         backend=make_backend(cfg.backend))
             self._join_scope(rt, scope_group)
             return rt
 
@@ -273,10 +287,17 @@ class FreshenScheduler:
         return self._ensure_router().submit(self.run_chain, fns, args, freshen)
 
     def shutdown(self, wait: bool = True):
+        """Stop the router; with ``wait=True`` (the default) also close
+        every pool's idle instances once in-flight work has drained —
+        terminating subprocess backend workers so platforms never leak
+        processes.  Pools stay usable afterwards (they re-provision)."""
         with self._lock:
             router, self._router = self._router, None
         if router is not None:
             router.shutdown(wait=wait)
+        if wait:
+            for pool in list(self.pools.values()):
+                pool.close()
 
     # ------------------------------------------------------------------
     def platform_stats(self) -> dict:

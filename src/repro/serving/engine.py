@@ -58,7 +58,8 @@ class ModelEndpoint:
                  batch_size: int = 4, seq_len: int = 64, app: str = "serving",
                  datastore=None, prefetch_key: Optional[str] = None,
                  prefetch_ttl: Optional[float] = None,
-                 warm_budget: Optional[WarmBudget] = None):
+                 warm_budget: Optional[WarmBudget] = None,
+                 spec_ref: Optional[str] = None):
         self.name = name
         self.cfg = cfg
         self.model = make_model(cfg)
@@ -71,6 +72,10 @@ class ModelEndpoint:
         self.prefetch_key = prefetch_key
         self.prefetch_ttl = prefetch_ttl
         self.warm_budget = warm_budget or WarmBudget(min_repetitions=0)
+        # "module:attr" the subprocess backend's worker can import to
+        # rebuild this endpoint's FunctionSpec (endpoint state does not
+        # pickle); None keeps the endpoint thread-backend-only
+        self.spec_ref = spec_ref
         self.timings: List[dict] = []
 
     # ------------------------------------------------------------------
@@ -213,7 +218,8 @@ class ModelEndpoint:
 
     def spec(self) -> FunctionSpec:
         return FunctionSpec(self.name, self.code,
-                            plan_factory=self.build_plan, app=self.app)
+                            plan_factory=self.build_plan, app=self.app,
+                            ref=self.spec_ref)
 
 
 class ServingEngine:
@@ -267,16 +273,28 @@ class ServingEngine:
         return self.cluster
 
     def deploy(self, ep: ModelEndpoint, pool_config=None,
-               shards: Optional[int] = None) -> Runtime:
+               shards: Optional[int] = None,
+               backend: Optional[str] = None) -> Runtime:
         """Register an endpoint; with ``shards=N`` (N>1) it joins the
         sharded fabric: one ``InstancePool`` per shard behind the
         ``ClusterRouter`` (lazily built at the first sharded deploy),
         warmth-aware routing and cross-shard freshen included.  Only the
         shard-0 primary is eagerly initialized — the other shards warm up
-        on demand or by prewarm, which is the point of the fabric."""
+        on demand or by prewarm, which is the point of the fabric.
+
+        ``backend`` selects the instance backend (repro.core.backend):
+        ``"subprocess"`` runs each instance in its own worker process so
+        cold starts are measured interpreter+import time.  A stock
+        ``ModelEndpoint``'s spec closes over live JAX state, so
+        subprocess deploys need an importable spec — set
+        ``FunctionSpec.ref`` (``"module:attr"``) on the spec the worker
+        should rebuild."""
         self.endpoints[ep.name] = ep
         if pool_config is None:
             pool_config = self._default_pool_config()
+        if backend is not None:
+            import dataclasses
+            pool_config = dataclasses.replace(pool_config, backend=backend)
         if shards is not None and shards > 1:
             cluster = self._ensure_cluster(shards)
             runtimes = cluster.register(ep.spec(), config=pool_config,

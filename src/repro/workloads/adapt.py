@@ -60,7 +60,9 @@ class AdaptDaemon:
                 app = pool.spec.app
                 if app not in summaries:
                     summaries[app] = sched.accountant.latency_summary(app)
-                cfg = self.policy.adapt(fn, summaries[app], pool.config)
+                cfg = self.policy.adapt(
+                    fn, summaries[app], pool.config,
+                    measured_cold_start=pool.measured_cold_start())
                 if (cfg.keep_alive == pool.config.keep_alive
                         and cfg.max_instances == pool.config.max_instances):
                     continue

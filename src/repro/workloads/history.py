@@ -160,19 +160,27 @@ class HistoryPolicy:
                 rec.seed(fn, [g * time_scale for g in h.interarrivals])
         return rec
 
-    def adapt(self, fn: str, summary: dict,
-              config: PoolConfig) -> PoolConfig:
+    def adapt(self, fn: str, summary: dict, config: PoolConfig,
+              measured_cold_start: Optional[float] = None) -> PoolConfig:
         """Close the loop from ``Accountant.latency_summary`` output: if
         cold starts still exceed ``target_cold_start_rate`` after enough
         invocations, double keep-alive (capped) and add one instance of
-        headroom — prediction under-covered, so buy retention instead."""
+        headroom — prediction under-covered, so buy retention instead.
+
+        ``measured_cold_start`` is the pool's *observed* mean init time
+        (``InstancePool.measured_cold_start``); under the subprocess
+        backend it is real interpreter-spawn + import time, which can far
+        exceed the configured ``cold_start_cost`` (often 0 there).  The
+        keep-alive floor honors whichever is larger: reaping faster than
+        the platform can actually boot guarantees thrash."""
         if summary.get("count", 0) < self.min_adapt_samples:
             return config
         rate = summary.get("cold_start_rate", 0.0)
         if rate <= self.target_cold_start_rate:
             return config
+        boot_cost = max(config.cold_start_cost, measured_cold_start or 0.0)
         keep_alive = max(min(config.keep_alive * 2.0, self.keep_alive_cap),
-                         config.cold_start_cost)
+                         boot_cost)
         max_instances = max(1, min(config.max_instances + 1,
                                    self.max_instances_cap))
         return replace(config, keep_alive=keep_alive,

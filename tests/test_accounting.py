@@ -1,0 +1,121 @@
+"""Accountant regression tests — the §3.3 accuracy-gate bookkeeping.
+
+Before the fixes pinned down here, ``record_invocation`` credited *every*
+pending freshen as useful on one arrival (and discarded future-anchored
+prewarms wholesale), so under periodic traffic the accuracy gate could
+never trip; ``sweep_expired`` billed every function's expirations to
+whatever app the caller passed; and ``peek_bill`` leaked the live mutable
+ledger entry.
+"""
+import pytest
+
+from repro.core import Accountant, ServiceClass
+
+
+def test_one_arrival_matches_at_most_one_pending_freshen():
+    """Three dispatched freshens, one arrival: exactly one is credited as
+    useful; the others stay pending and are consumed by later arrivals."""
+    acc = Accountant(misprediction_horizon=5.0)
+    for _ in range(3):
+        acc.record_freshen("app", "f", 0.01, now=100.0)
+    acc.record_invocation("app", "f", 0.01, now=100.5)
+    b = acc.bill("app")
+    assert b.useful_freshens == 1 and b.mispredicted_freshens == 0
+    acc.record_invocation("app", "f", 0.01, now=101.0)
+    acc.record_invocation("app", "f", 0.01, now=101.5)
+    b = acc.bill("app")
+    assert b.useful_freshens == 3 and b.mispredicted_freshens == 0
+    # all pending consumed: a fourth arrival credits nothing
+    acc.record_invocation("app", "f", 0.01, now=102.0)
+    assert acc.bill("app").useful_freshens == 3
+
+
+def test_nearest_anchor_within_horizon_wins():
+    """With several matchable anchors the one nearest the arrival is the
+    one consumed (and only it)."""
+    acc = Accountant(misprediction_horizon=10.0)
+    acc.record_freshen("app", "f", 0.01, now=0.0, expected_delay=2.0)
+    acc.record_freshen("app", "f", 0.01, now=0.0, expected_delay=9.0)
+    acc.record_invocation("app", "f", 0.01, now=9.1)   # nearest: the 9s one
+    b = acc.bill("app")
+    assert b.useful_freshens == 1
+    # the 2s anchor is now 7.1s past — still within the 10s horizon, so it
+    # remains pending and matches the next arrival
+    acc.record_invocation("app", "f", 0.01, now=10.0)
+    assert acc.bill("app").useful_freshens == 2
+
+
+def test_future_anchored_prewarm_survives_unrelated_arrival():
+    """A 60s-period timer prewarm must be neither credited nor discarded
+    by an immediate unrelated arrival (horizon 5s << period)."""
+    acc = Accountant(misprediction_horizon=5.0)
+    acc.record_freshen("app", "timer", 0.01, now=0.0, expected_delay=60.0)
+    acc.record_invocation("app", "timer", 0.01, now=0.1)   # unrelated
+    b = acc.bill("app")
+    assert b.useful_freshens == 0 and b.mispredicted_freshens == 0
+    # the *predicted* arrival still gets the credit
+    acc.record_invocation("app", "timer", 0.01, now=60.0)
+    b = acc.bill("app")
+    assert b.useful_freshens == 1 and b.mispredicted_freshens == 0
+
+
+def test_expired_anchor_billed_as_misprediction_on_arrival():
+    acc = Accountant(misprediction_horizon=5.0)
+    acc.record_freshen("app", "f", 0.01, now=0.0)
+    acc.record_invocation("app", "f", 0.01, now=50.0)   # way past horizon
+    b = acc.bill("app")
+    assert b.useful_freshens == 0 and b.mispredicted_freshens == 1
+
+
+def test_sweep_expired_bills_owning_app():
+    """Expirations are charged to the app that dispatched the freshen
+    (recorded at record_freshen time), regardless of who runs the sweep."""
+    acc = Accountant(misprediction_horizon=5.0)
+    acc.record_freshen("app_a", "fa", 0.01, now=0.0)
+    acc.record_freshen("app_b", "fb", 0.01, now=0.0)
+    acc.sweep_expired("app_a", now=100.0)     # caller arg is compat-only
+    assert acc.bill("app_a").mispredicted_freshens == 1
+    assert acc.bill("app_b").mispredicted_freshens == 1
+    # sweeping again never double-bills
+    acc.sweep_expired("app_b", now=200.0)
+    assert acc.bill("app_a").mispredicted_freshens == 1
+    assert acc.bill("app_b").mispredicted_freshens == 1
+
+
+def test_peek_bill_returns_copy_and_never_inserts():
+    acc = Accountant()
+    acc.record_invocation("app", "f", 1.0)
+    view = acc.peek_bill("app")
+    view.function_seconds += 100.0
+    view.mispredicted_freshens += 50
+    live = acc.bill("app")
+    assert live.function_seconds == pytest.approx(1.0)
+    assert live.mispredicted_freshens == 0
+    # unknown apps: an empty snapshot, and no phantom ledger entry
+    assert acc.peek_bill("ghost").function_invocations == 0
+    assert "ghost" not in acc.apps()
+
+
+def test_accuracy_gate_trips_under_periodic_misprediction():
+    """The regression the paper's §3.3 gate exists for: a 60s-period
+    prediction that keeps firing while real arrivals land elsewhere in the
+    period must accumulate mispredictions until freshen is disabled.
+    (Under the old all-pending-credited-on-any-arrival accounting the
+    arrivals below marked every prewarm useful and the gate never
+    tripped.)"""
+    acc = Accountant(misprediction_horizon=5.0, disable_after=10,
+                     disable_miss_rate=0.8)
+    acc.service_class["app"] = ServiceClass.LATENCY_SENSITIVE
+    now = 0.0
+    for _ in range(12):
+        acc.record_freshen("app", "timer", 0.01, now=now,
+                           expected_delay=60.0)       # predicts now+60
+        # the actual arrival lands mid-period, outside the horizon: the
+        # anchor is neither matched nor (yet) expired
+        acc.record_invocation("app", "timer", 0.01, now=now + 20.0)
+        now += 70.0
+        acc.sweep_expired(now=now)                    # anchor expires
+    b = acc.bill("app")
+    assert b.useful_freshens == 0
+    assert b.mispredicted_freshens == 12
+    assert not acc.should_freshen("app", confidence=0.95)   # gate tripped

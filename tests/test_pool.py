@@ -21,6 +21,34 @@ def _noop_spec(name="f", app="app"):
     return FunctionSpec(name, lambda ctx, args: args, app=app)
 
 
+# module-level (picklable) function bodies: the backend-parametrized tests
+# below also run under the subprocess backend, whose worker unpickles the
+# spec by reference and imports this module
+def _slow_code(ctx, args):
+    time.sleep(0.05)
+
+
+def _echo_code(ctx, args):
+    return ("out", args)
+
+
+def _pool_fetch():
+    time.sleep(0.01)
+    return "v"
+
+
+def _pool_plan(rt):
+    return FreshenPlan([PlanEntry("r0", Action.FETCH, _pool_fetch)])
+
+
+def _planned_code(ctx, args):
+    return ctx.fr_fetch(0)
+
+
+def _noop_code(ctx, args):
+    return args
+
+
 def _planned_spec(name, fetched, value="v", cost=0.0, app="app"):
     def make_plan(rt):
         def fetch():
@@ -79,10 +107,12 @@ def test_reap_spares_busy_instances():
 # ----------------------------------------------------------------------
 # Burst traffic scale-up
 @pytest.mark.parametrize("rep", range(3))
-def test_burst_scales_up_to_cap_and_queues(rep):
-    spec = FunctionSpec("slow", lambda ctx, args: time.sleep(0.05), app="app")
+@pytest.mark.parametrize("backend", ["thread", "subprocess"])
+def test_burst_scales_up_to_cap_and_queues(rep, backend):
+    spec = FunctionSpec("slow", _slow_code, app="app")
     sched = FreshenScheduler(pool_config=PoolConfig(max_instances=3,
-                                                    keep_alive=30.0))
+                                                    keep_alive=30.0,
+                                                    backend=backend))
     sched.register(spec)
     futs = [sched.submit("slow", freshen_successors=False) for _ in range(8)]
     done, not_done = wait(futs, timeout=30)
@@ -148,6 +178,30 @@ def test_scale_up_queue_depth_throttles_growth():
 
 # ----------------------------------------------------------------------
 # Prewarm-aware freshen dispatch
+@pytest.mark.parametrize("backend", ["thread", "subprocess"])
+def test_prewarm_freshen_hits_across_backends(backend):
+    """The prewarm→hit pipeline holds under both instance backends; under
+    the subprocess backend the freshen hook runs inside the worker and its
+    counters round-trip back through the pipe protocol."""
+    sched = FreshenScheduler(pool_config=PoolConfig(backend=backend))
+    sched.predictor.graph.add_chain(["pa", "pb"])
+    sched.register(FunctionSpec("pa", _noop_code, app="app"))
+    sched.register(FunctionSpec("pb", _planned_code,
+                                plan_factory=_pool_plan, app="app"))
+    try:
+        sched.invoke("pa")                   # predicts pb -> prewarm dispatch
+        sched.pool("pb").primary.join_freshen(timeout=30)
+        out = sched.invoke("pb", freshen_successors=False)
+        assert out == "v"
+        st = sched.pool("pb").freshen_stats()
+        assert st["freshened"] == 1          # background freshen did the work
+        assert st["hits"] >= 1               # ...and the invocation consumed it
+        assert st["inline"] == 0
+        assert sched.pool("pb").stats()["prewarm_dispatches"] == 1
+    finally:
+        sched.shutdown()
+
+
 @pytest.mark.parametrize("rep", range(3))
 def test_prewarm_freshen_hits_on_next_invocation(rep):
     fetched = {"n": 0}
@@ -280,9 +334,11 @@ def test_runtimes_view_survives_reap():
 # ----------------------------------------------------------------------
 # Concurrent router correctness
 @pytest.mark.parametrize("rep", range(3))
-def test_concurrent_submits_return_correct_results(rep):
-    spec = FunctionSpec("echo", lambda ctx, args: ("out", args), app="app")
-    sched = FreshenScheduler(pool_config=PoolConfig(max_instances=4))
+@pytest.mark.parametrize("backend", ["thread", "subprocess"])
+def test_concurrent_submits_return_correct_results(rep, backend):
+    spec = FunctionSpec("echo", _echo_code, app="app")
+    sched = FreshenScheduler(pool_config=PoolConfig(max_instances=4,
+                                                    backend=backend))
     sched.register(spec)
     futs = [sched.submit("echo", i, freshen_successors=False)
             for i in range(32)]
