@@ -1,0 +1,235 @@
+"""Elastic-fleet benchmark: static 1/2/4 shards vs a self-resizing fleet.
+
+The paper's freshen primitive hides per-instance cold starts; this
+benchmark applies the same proactive idea one level up, to the shard set
+itself.  A bursty synthetic trace (the queue-trigger archetype: Poisson
+bursts separated by idle gaps) is replayed into four fabrics:
+
+* ``static1`` / ``static2`` / ``static4`` — fixed fleets built at those
+  sizes.  More shards buy burst capacity but every shard's instances
+  idle (and bill instance-seconds) through the gaps.
+* ``elastic`` — starts at 1 shard with an ``AdaptDaemon`` running
+  fleet rules (``FleetPolicy``): aggregate queue depth during a burst
+  adds shards (``ClusterRouter.add_worker`` — registrations replayed,
+  cross-shard freshen prewarms the new capacity); sustained idle in the
+  gaps drains them (``remove_worker(drain=True)`` — warmth handed back
+  to the survivor, in-flight work completing, history retained).
+
+The trade the fleet-elasticity is buying: **burst p95 close to the big
+static fleet at a fraction of its instance-seconds** (the integral of
+live instances over the run, sampled; ``shard_seconds`` is the same
+integral over live shards).  The elastic arm should hold p95 within ~2x
+of ``static4`` while spending well under its instance-seconds — near
+the ``static1`` floor, because between bursts it *is* a 1-shard fleet.
+
+CSV rows (stdout, via benchmarks/run.py — schema in docs/benchmarks.md):
+``elastic_shards/<arm>``; ``us_per_call`` is p95 end-to-end latency in
+microseconds; ``derived`` packs p50/p99, cold counts/rate,
+instance-seconds, shard-seconds, peak/final shard counts, and the fleet
+actions taken.
+
+Run on CPU:  PYTHONPATH=src python benchmarks/elastic_shards.py
+(harness: PYTHONPATH=src:. python benchmarks/run.py elastic_shards;
+CI smoke: ELASTIC_SHARDS_SMOKE=1 shrinks to 2 bursts and drops static2.)
+"""
+import os
+import sys
+import threading
+import time
+
+from repro.core import Accountant, FunctionSpec, PoolConfig, ServiceClass
+from repro.core.freshen import Action, FreshenPlan, PlanEntry
+from repro.cluster import ClusterRouter
+from repro.workloads import AdaptDaemon, FleetPolicy, Trace, TraceReplayer
+
+FETCH_COST = 0.004       # seconds: the freshen-plan resource fetch
+COMPUTE_COST = 0.008     # seconds: the function body proper
+COLD_START = 0.015       # seconds: container/sandbox creation
+KEEP_ALIVE = 0.25        # wall seconds: spans a burst, not a gap — static
+                         # fleets scale instances to zero between bursts
+                         # too, so the contest is about *shard* overhead
+MAX_INSTANCES = 2        # per function per shard: one shard cannot absorb
+                         # a burst alone, so capacity must come from shards
+BURST_RATE = 400.0       # arrivals/second inside a burst (per function)
+GAP = 1.0                # wall seconds of idle between bursts
+APP = "elastic"
+
+DAEMON_INTERVAL = 0.015
+FLEET = dict(min_shards=1, max_shards=4, scale_out_queue_depth=3,
+             scale_in_idle_passes=4)
+
+
+def _knobs():
+    """(bursts, burst_size, arms); tiny under ELASTIC_SHARDS_SMOKE."""
+    if os.environ.get("ELASTIC_SHARDS_SMOKE"):
+        return 2, 24, ("static1", "static4", "elastic")
+    return (int(os.environ.get("ELASTIC_SHARDS_BURSTS", "3")),
+            int(os.environ.get("ELASTIC_SHARDS_BURST_SIZE", "64")),
+            ("static1", "static2", "static4", "elastic"))
+
+
+def _trace(bursts: int, burst_size: int) -> Trace:
+    """Two staggered bursty functions — enough concurrent demand during a
+    burst to saturate one shard, dead air in between."""
+    return Trace.merge(
+        [Trace.bursty(f"burst-{i}", bursts=bursts, burst_size=burst_size,
+                      gap=GAP, rate=BURST_RATE, duration=COMPUTE_COST,
+                      phase=i * 0.01)
+         for i in range(2)],
+        name="bursty-mix")
+
+
+def _spec(name: str) -> FunctionSpec:
+    def make_plan(rt):
+        def fetch():
+            time.sleep(FETCH_COST)
+            return {"resource": name}
+        return FreshenPlan([PlanEntry("data", Action.FETCH, fetch)])
+
+    def code(ctx, args):
+        data = ctx.fr_fetch(0)
+        time.sleep(COMPUTE_COST)
+        return data["resource"]
+
+    return FunctionSpec(name, code, plan_factory=make_plan, app=APP)
+
+
+class _FleetMeter:
+    """Samples the cluster every few ms and integrates live instances and
+    live shards over wall time — the resource half of the trade-off
+    (`instance_seconds` is what a provider would bill for)."""
+
+    def __init__(self, cluster, period: float = 0.005):
+        self.cluster = cluster
+        self.period = period
+        self.instance_seconds = 0.0
+        self.shard_seconds = 0.0
+        self.peak_shards = 0
+        self.peak_instances = 0
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+
+    def _run(self):
+        last = time.monotonic()
+        while not self._stop.wait(self.period):
+            now = time.monotonic()
+            dt, last = now - last, now
+            workers = self.cluster.workers
+            instances = sum(pool.size()
+                            for w in workers
+                            for pool in list(w.scheduler.pools.values()))
+            self.instance_seconds += instances * dt
+            self.shard_seconds += len(workers) * dt
+            self.peak_shards = max(self.peak_shards, len(workers))
+            self.peak_instances = max(self.peak_instances, instances)
+
+    def __enter__(self):
+        self._thread.start()
+        return self
+
+    def __exit__(self, *exc):
+        self._stop.set()
+        self._thread.join()
+        return False
+
+
+def _accountant() -> Accountant:
+    acct = Accountant()
+    acct.service_class[APP] = ServiceClass.LATENCY_SENSITIVE
+    acct.disable_after = 10 ** 9              # policy out of the way
+    return acct
+
+
+def _drive(arm: str, bursts: int, burst_size: int) -> dict:
+    trace = _trace(bursts, burst_size)
+    shards = {"static1": 1, "static2": 2, "static4": 4,
+              "elastic": 1}[arm]
+    cfg = PoolConfig(max_instances=MAX_INSTANCES, keep_alive=KEEP_ALIVE,
+                     cold_start_cost=COLD_START, prewarm_provision=True)
+    cluster = ClusterRouter.build(shards, policy="least-loaded",
+                                  pool_config=cfg, cross_freshen=True)
+    cluster.accountant_factory = _accountant
+    for w in cluster.workers:
+        acct = w.scheduler.accountant
+        acct.service_class[APP] = ServiceClass.LATENCY_SENSITIVE
+        acct.disable_after = 10 ** 9
+    for fn in trace.functions:
+        cluster.register(_spec(fn))
+    daemon = None
+    if arm == "elastic":
+        daemon = AdaptDaemon(cluster=cluster, interval=DAEMON_INTERVAL,
+                             fleet=FleetPolicy(**FLEET), adapt_pools=False)
+    with _FleetMeter(cluster) as meter:
+        if daemon is not None:
+            daemon.start()
+        report = TraceReplayer(cluster, trace, time_scale=1.0).run(
+            freshen=True)
+        if daemon is not None:
+            daemon.stop()
+    summary = cluster.accountant.latency_summary(APP)
+    stats = cluster.stats()
+    cluster.shutdown()
+    summary.update(
+        requests=report.requests, errors=report.errors, wall=report.wall,
+        lag_p95=report.lag_p95,
+        instance_seconds=meter.instance_seconds,
+        shard_seconds=meter.shard_seconds,
+        peak_shards=meter.peak_shards,
+        peak_instances=meter.peak_instances,
+        final_shards=stats["num_shards"],
+        added=stats["added"], removed=stats["removed"],
+        daemon_errors=daemon.errors if daemon is not None else 0)
+    return summary
+
+
+def _report(results: dict):
+    # human-readable table goes to stderr: run.py's stdout is a CSV contract
+    out = sys.stderr
+    any_s = next(iter(results.values()))
+    print(f"\n=== elastic_shards: bursty mix "
+          f"({any_s['requests']} requests/run) ===", file=out)
+    print(f"{'':10s} {'p50':>8s} {'p95':>8s} {'cold':>5s} {'rate':>6s} "
+          f"{'inst-s':>8s} {'shard-s':>8s} {'peak':>5s} {'+/-':>5s}",
+          file=out)
+    for label, s in results.items():
+        print(f"{label:10s} {s['p50']*1e3:7.1f}ms {s['p95']*1e3:7.1f}ms "
+              f"{s['cold_starts']:5d} {s['cold_start_rate']:6.2f} "
+              f"{s['instance_seconds']:8.2f} {s['shard_seconds']:8.2f} "
+              f"{s['peak_shards']:5d} {s['added']:2d}/{s['removed']:<2d}",
+              file=out)
+    if "elastic" in results and "static4" in results:
+        e, s4 = results["elastic"], results["static4"]
+        if s4["p95"] > 0 and s4["instance_seconds"] > 0:
+            print(f"elastic vs static4: p95 x{e['p95'] / s4['p95']:.2f}, "
+                  f"instance-seconds "
+                  f"x{e['instance_seconds'] / s4['instance_seconds']:.2f}",
+                  file=out)
+
+
+def run():
+    """Harness entry (benchmarks/run.py): CSV rows name,us_per_call,derived."""
+    bursts, burst_size, arms = _knobs()
+    results = {arm: _drive(arm, bursts, burst_size) for arm in arms}
+    _report(results)
+    rows = []
+    for label, s in results.items():
+        rows.append((f"elastic_shards/{label}",
+                     f"{s['p95'] * 1e6:.0f}",
+                     f"p50us={s['p50']*1e6:.0f};"
+                     f"p99us={s['p99']*1e6:.0f};"
+                     f"cold={s['cold_starts']};"
+                     f"cold_rate={s['cold_start_rate']:.3f};"
+                     f"inst_s={s['instance_seconds']:.3f};"
+                     f"shard_s={s['shard_seconds']:.3f};"
+                     f"peak_shards={s['peak_shards']};"
+                     f"final_shards={s['final_shards']};"
+                     f"added={s['added']};"
+                     f"removed={s['removed']};"
+                     f"requests={s['requests']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for row in run():
+        print(",".join(str(x) for x in row))

@@ -7,9 +7,9 @@ import time
 def main() -> None:
     mods = []
     from benchmarks import (backend_cold_start, chain_e2e, cluster_scale,
-                            fig4_fetch, fig5_warming, pool_load,
-                            prediction_quality, roofline, table1_triggers,
-                            trace_replay)
+                            elastic_shards, fig4_fetch, fig5_warming,
+                            pool_load, prediction_quality, roofline,
+                            table1_triggers, trace_replay)
     mods = [("table1_triggers", table1_triggers),
             ("fig4_fetch", fig4_fetch),
             ("fig5_warming", fig5_warming),
@@ -19,6 +19,7 @@ def main() -> None:
             ("backend_cold_start", backend_cold_start),
             ("trace_replay", trace_replay),
             ("cluster_scale", cluster_scale),
+            ("elastic_shards", elastic_shards),
             ("roofline", roofline)]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

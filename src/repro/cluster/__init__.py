@@ -12,15 +12,19 @@ scale — on the worker the router will actually pick:
 * ``router``     — ``ClusterRouter`` with pluggable policies
   (``least-loaded`` / ``warmth-aware`` / ``sticky`` consistent-hash),
   cross-shard freshen propagation (prewarms land on the shard the
-  routing decision selects), spill-on-saturation queue draining, and
-  ``rebalance()``.
+  routing decision selects), spill-on-saturation queue draining,
+  ``rebalance()``, and elastic membership: ``add_worker`` /
+  ``remove_worker(shard, drain=True)`` grow and shrink the fleet at
+  runtime with warm-state draining (``DrainReport``).
 * ``accounting`` — ``ClusterAccountant``: merged cluster-wide
   ``latency_summary`` (raw-sample merge, since percentiles do not
-  compose) plus the per-shard decomposition.
+  compose) plus the per-shard decomposition; ``attach``/``retire``
+  track elastic membership, folding departed shards into a retained
+  ledger so summaries never lose history.
 """
 from repro.cluster.accounting import ClusterAccountant  # noqa: F401
 from repro.cluster.router import (POLICIES, ClusterRouter,  # noqa: F401
-                                  LeastLoadedPolicy, StickyPolicy,
-                                  WarmthAwarePolicy, make_policy,
-                                  partition_devices)
+                                  DrainReport, LeastLoadedPolicy,
+                                  StickyPolicy, WarmthAwarePolicy,
+                                  make_policy, partition_devices)
 from repro.cluster.worker import ClusterWorker  # noqa: F401

@@ -7,10 +7,17 @@ cluster p95), so ``latency_summary`` merges the shards' raw sample
 windows and re-ranks — the summary is exactly what one global Accountant
 would have reported, while ``per_shard`` keeps the decomposition the
 router and benchmarks use to see *where* the tail lives.
+
+The ledger set is elastic, matching the fabric: ``attach`` admits a new
+shard's accountant when the cluster grows, and ``retire`` moves a
+departing shard's accountant into a *retained* set when the cluster
+shrinks — its samples and bills keep counting in every merged view, so a
+drain never loses history, while live-only views (``per_shard``) stop
+showing the departed shard.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence
+from typing import List, Sequence
 
 from repro.core.accounting import Accountant, AppBill, _percentile_sorted
 
@@ -22,20 +29,39 @@ class ClusterAccountant:
         if not accountants:
             raise ValueError("need at least one shard accountant")
         self.accountants: List[Accountant] = list(accountants)
+        self.retired: List[Accountant] = []
+
+    # -- elastic membership ---------------------------------------------
+    def attach(self, accountant: Accountant):
+        """Admit a new shard's ledger (cluster grew)."""
+        if accountant not in self.accountants:
+            self.accountants.append(accountant)
+
+    def retire(self, accountant: Accountant):
+        """Move a departing shard's ledger to the retained set (cluster
+        shrank): its history keeps counting in merged views but it no
+        longer appears in per-shard decompositions."""
+        if accountant in self.accountants:
+            self.accountants.remove(accountant)
+            if accountant not in self.retired:
+                self.retired.append(accountant)
+
+    def _all(self) -> List[Accountant]:
+        return list(self.accountants) + list(self.retired)
 
     def apps(self) -> List[str]:
         apps = set()
-        for acct in self.accountants:
+        for acct in self._all():
             apps.update(acct.apps())
         return sorted(apps)
 
     def bill(self, app: str) -> AppBill:
-        """Cluster-wide bill: every field summed across shards (bills are
-        additive — seconds, invocation counts, cold starts).  Reads via
-        ``peek_bill`` so polling an unknown app never plants phantom
-        entries in every shard's ledger."""
+        """Cluster-wide bill: every field summed across shards — live and
+        retired (bills are additive — seconds, invocation counts, cold
+        starts).  Reads via ``peek_bill`` so polling an unknown app never
+        plants phantom entries in every shard's ledger."""
         total = AppBill()
-        for acct in self.accountants:
+        for acct in self._all():
             b = acct.peek_bill(app)
             total.function_seconds += b.function_seconds
             total.freshen_seconds += b.freshen_seconds
@@ -50,10 +76,10 @@ class ClusterAccountant:
     def latency_summary(self, app: str) -> dict:
         """The same shape as ``Accountant.latency_summary`` (drop-in for
         HistoryPolicy.adapt and benchmark reporting), computed over the
-        union of every shard's sample window."""
+        union of every shard's sample window — retired shards included."""
         lats: List[float] = []
         qds: List[float] = []
-        for acct in self.accountants:
+        for acct in self._all():
             lats.extend(acct.latency_samples(app))
             qds.extend(acct.queue_delay_samples(app))
         lats.sort()
@@ -72,6 +98,7 @@ class ClusterAccountant:
         }
 
     def per_shard(self, app: str) -> List[dict]:
-        """Each shard's own ``latency_summary`` in shard order — the view
-        that shows which shard the tail (or the cold starts) lives on."""
-        return [acct.latency_summary(app) for acct in self.accountants]
+        """Each *live* shard's own ``latency_summary`` in shard order —
+        the view that shows which shard the tail (or the cold starts)
+        lives on.  Departed shards' history stays in the merged views."""
+        return [acct.latency_summary(app) for acct in list(self.accountants)]

@@ -23,6 +23,16 @@ freshen machinery cannot express:
   admits it); ``rebalance()`` additionally pushes warmth toward idle
   neighbors of hot shards so warmth-aware routing diverts *future*
   arrivals before they queue.
+* **Elastic membership**: the shard set itself is mutable at runtime.
+  ``add_worker`` spawns a new shard and replays every cluster-wide
+  function registration onto it so routing can pick it immediately;
+  ``remove_worker(shard, drain=True)`` walks the drain state machine —
+  the shard stops accepting routes, its warm functions are
+  prewarm-provisioned onto surviving shards (the rebalance neighbor
+  choice), in-flight work completes, its ledger is folded into the
+  cluster accountant's retained history, and only then is it shut down.
+  Shard ids are never reused, so the sticky ring remap stays the
+  consistent-hash minimum across any add/remove history.
 """
 from __future__ import annotations
 
@@ -30,9 +40,11 @@ import bisect
 import hashlib
 import itertools
 import threading
+import time
+from collections import OrderedDict
 from concurrent.futures import Future
-from dataclasses import replace
-from typing import Dict, List, Optional, Sequence, Union
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core.accounting import Accountant
 from repro.core.pool import PoolConfig, PoolSaturated
@@ -90,13 +102,19 @@ class StickyPolicy:
     ring of shards.  Deterministic across router instances and processes
     (keyed hashing, not Python's salted ``hash``), and stable under shard
     count changes: growing N shards to N+1 remaps only the functions whose
-    ring segment the new shard's virtual nodes capture (~1/(N+1))."""
+    ring segment the new shard's virtual nodes capture (~1/(N+1)).
+
+    Rings are memoized per shard-id tuple in a bounded LRU: an elastic
+    cluster resharding repeatedly would otherwise leak one ring (of
+    ``replicas`` × shards entries) per membership the fabric ever had."""
 
     name = "sticky"
 
-    def __init__(self, replicas: int = 64):
+    def __init__(self, replicas: int = 64, max_rings: int = 8):
         self.replicas = replicas
-        self._rings: Dict[tuple, list] = {}
+        self.max_rings = max(1, max_rings)
+        self._rings: "OrderedDict[tuple, list]" = OrderedDict()
+        self._ring_lock = threading.Lock()
 
     @staticmethod
     def _hash(key: str) -> int:
@@ -105,11 +123,18 @@ class StickyPolicy:
 
     def _ring(self, shard_ids: Sequence[int]) -> list:
         key = tuple(sorted(shard_ids))
-        ring = self._rings.get(key)
-        if ring is None:
-            ring = sorted((self._hash(f"shard:{s}#vnode:{v}"), s)
-                          for s in key for v in range(self.replicas))
+        with self._ring_lock:
+            ring = self._rings.get(key)
+            if ring is not None:
+                self._rings.move_to_end(key)
+                return ring
+        ring = sorted((self._hash(f"shard:{s}#vnode:{v}"), s)
+                      for s in key for v in range(self.replicas))
+        with self._ring_lock:
             self._rings[key] = ring
+            self._rings.move_to_end(key)
+            while len(self._rings) > self.max_rings:
+                self._rings.popitem(last=False)
         return ring
 
     def select(self, fn: str, workers: Sequence[ClusterWorker]) -> int:
@@ -132,8 +157,29 @@ def make_policy(policy: Union[str, object]):
     return policy
 
 
+@dataclass
+class _Registration:
+    """What ``register`` was called with, so an added shard can replay it.
+    ``elastic`` is False for explicit shard-subset registrations — those
+    stay on their subset when the fleet grows."""
+    spec: FunctionSpec
+    config: Optional[PoolConfig]
+    backend: Optional[str]
+    elastic: bool
+
+
+@dataclass
+class DrainReport:
+    """What ``remove_worker(shard, drain=True)`` did."""
+    shard: int
+    drained: bool
+    handoffs: List[Tuple[str, int]] = field(default_factory=list)
+    inflight_at_removal: int = 0
+
+
 class ClusterRouter:
-    """The sharded serving fabric's front door: route, propagate, drain."""
+    """The sharded serving fabric's front door: route, propagate, drain,
+    and — elastically — grow and shrink."""
 
     def __init__(self, workers: Sequence[ClusterWorker],
                  policy: Union[str, object] = "warmth-aware",
@@ -141,27 +187,49 @@ class ClusterRouter:
                  cross_freshen: bool = True):
         if not workers:
             raise ValueError("a cluster needs at least one worker")
-        self.workers: List[ClusterWorker] = list(workers)
-        self._by_shard = {w.shard_id: w for w in self.workers}
-        if len(self._by_shard) != len(self.workers):
+        self._workers: List[ClusterWorker] = list(workers)
+        self._by_shard = {w.shard_id: w for w in self._workers}
+        if len(self._by_shard) != len(self._workers):
             raise ValueError("duplicate shard ids")
         self.policy = make_policy(policy)
         self.spill_timeout = spill_timeout
         self.cross_freshen = cross_freshen
         self.accountant = ClusterAccountant(
-            [w.scheduler.accountant for w in self.workers])
+            [w.scheduler.accountant for w in self._workers])
+        # how add_worker builds a shard's Accountant (benchmarks override
+        # this to pre-configure service class / policy knobs on elastic
+        # shards exactly as they did on the initial ones)
+        self.accountant_factory = Accountant
         self._lock = threading.Lock()
+        # control-plane lock: register / add_worker / remove_worker are
+        # serialized against each other (a function registered while a
+        # shard is joining must land on it exactly once — either via the
+        # replay snapshot or via the registration's own target list).
+        # The data plane (route/submit/stats) only ever takes _lock.
+        self._admin = threading.RLock()
+        self._closed = False
+        # monotone shard-id allocator: departed ids are never reused, so
+        # a re-added shard hashes to a fresh ring segment and per-shard
+        # history stays unambiguous
+        self._next_shard = max(self._by_shard) + 1
+        self._registry: Dict[str, _Registration] = {}
+        self._departed: List[int] = []
+        self.added = 0
+        self.removed = 0
         # router counters (read under the lock via stats())
-        self.routed: Dict[int, int] = {w.shard_id: 0 for w in self.workers}
+        self.routed: Dict[int, int] = {w.shard_id: 0 for w in self._workers}
         self.cross_freshens = 0
         self.local_freshens = 0
         self.spills = 0
         self.saturations: Dict[int, int] = {w.shard_id: 0
-                                            for w in self.workers}
-        for w in self.workers:
-            w.scheduler.freshen_route = (
-                lambda pred, _origin=w.shard_id:
-                    self._route_freshen(_origin, pred))
+                                            for w in self._workers}
+        for w in self._workers:
+            self._hook_freshen_route(w)
+
+    def _hook_freshen_route(self, w: ClusterWorker):
+        w.scheduler.freshen_route = (
+            lambda pred, _origin=w.shard_id:
+                self._route_freshen(_origin, pred))
 
     # -- construction ---------------------------------------------------
     @classmethod
@@ -189,15 +257,25 @@ class ClusterRouter:
                    cross_freshen=cross_freshen)
 
     @property
+    def workers(self) -> List[ClusterWorker]:
+        """Snapshot of the live worker list (membership is mutable:
+        iterate the snapshot, never the router's internal list)."""
+        with self._lock:
+            return list(self._workers)
+
+    @property
     def num_shards(self) -> int:
-        return len(self.workers)
+        with self._lock:
+            return len(self._workers)
 
     @property
     def predictor(self) -> HybridPredictor:
-        return self.workers[0].scheduler.predictor
+        with self._lock:
+            return self._workers[0].scheduler.predictor
 
     def worker(self, shard: int) -> ClusterWorker:
-        return self._by_shard[shard]
+        with self._lock:
+            return self._by_shard[shard]
 
     def register(self, spec: FunctionSpec,
                  config: Optional[PoolConfig] = None,
@@ -209,17 +287,173 @@ class ClusterRouter:
         is copied per shard: pools own their config object (and
         ``reconfigure`` mutates it in place), so sharing one across
         shards would let adapting shard A silently retune shard B.
-        ``backend`` selects the instance backend on every target shard."""
-        targets = (self.workers if shards is None
-                   else [self._by_shard[s] for s in shards])
-        return {w.shard_id: w.register(
-                    spec, config=None if config is None else replace(config),
-                    backend=backend)
-                for w in targets}
+        ``backend`` selects the instance backend on every target shard.
+
+        Cluster-wide registrations are remembered: a shard added later
+        (``add_worker``) replays them so the new capacity can serve every
+        elastic function the moment it joins the ring.  Explicit
+        shard-subset registrations stay on their subset."""
+        with self._admin:
+            self._check_open()
+            with self._lock:
+                targets = (list(self._workers) if shards is None
+                           else [self._by_shard[s] for s in shards])
+                self._registry[spec.name] = _Registration(
+                    spec, config, backend, elastic=shards is None)
+            return {w.shard_id: w.register(
+                        spec,
+                        config=None if config is None else replace(config),
+                        backend=backend)
+                    for w in targets}
+
+    # -- elastic membership ---------------------------------------------
+    def add_worker(self, worker: Optional[ClusterWorker] = None,
+                   devices: Optional[Sequence] = None,
+                   pool_config: Optional[PoolConfig] = None,
+                   max_router_threads: Optional[int] = None
+                   ) -> ClusterWorker:
+        """Grow the fleet by one shard at runtime.
+
+        Builds a ``ClusterWorker`` on a fresh (never-reused) shard id —
+        sharing the cluster predictor, with its own ``Accountant`` from
+        ``accountant_factory`` — or adopts a caller-built ``worker``.
+        Every cluster-wide function registration is replayed onto it
+        *before* it joins the routing set, so the first arrival the
+        policy sends its way finds a registered pool, and the sticky ring
+        remaps only ~1/(N+1) of keys onto it."""
+        with self._admin:
+            self._check_open()
+            with self._lock:
+                template = self._workers[0].scheduler
+                if worker is None:
+                    shard_id = self._next_shard
+                    self._next_shard += 1
+                elif worker.shard_id in self._by_shard or \
+                        worker.shard_id in self._departed:
+                    raise ValueError(
+                        f"shard id {worker.shard_id} already used by this "
+                        f"cluster (ids are never reused)")
+                else:
+                    self._next_shard = max(self._next_shard,
+                                           worker.shard_id + 1)
+                registrations = [r for r in self._registry.values()
+                                 if r.elastic]
+            if worker is None:
+                worker = ClusterWorker(
+                    shard_id, predictor=template.predictor,
+                    accountant=self.accountant_factory(),
+                    pool_config=pool_config or template.pool_config,
+                    devices=devices,
+                    max_router_threads=(max_router_threads
+                                        or template.max_router_threads))
+            for reg in registrations:
+                worker.register(
+                    reg.spec,
+                    config=None if reg.config is None
+                    else replace(reg.config),
+                    backend=reg.backend)
+            self._hook_freshen_route(worker)
+            self.accountant.attach(worker.scheduler.accountant)
+            with self._lock:
+                self._workers.append(worker)
+                self._by_shard[worker.shard_id] = worker
+                self.routed.setdefault(worker.shard_id, 0)
+                self.saturations.setdefault(worker.shard_id, 0)
+                self.added += 1
+            return worker
+
+    def remove_worker(self, shard: int, drain: bool = True,
+                      drain_timeout: float = 30.0) -> DrainReport:
+        """Shrink the fleet by one shard without discarding its warmth.
+
+        The drain state machine: (1) the shard leaves the routing set
+        under the lock — no new route/submit can pick it; (2) its warm
+        functions are prewarm-provisioned onto the surviving shard the
+        rebalance neighbor-choice selects (most idle capacity, then least
+        load), so the warmth the fleet paid for reappears where arrivals
+        will now be routed; (3) in-flight and queued work on the shard
+        completes (no future is ever dropped); (4) its ledger is folded
+        into the cluster accountant's retained history; (5) the worker is
+        shut down — subprocess workers terminated, pools closed.
+
+        ``drain=False`` skips (2)–(3): the shard is cut loose immediately
+        (its in-flight futures still complete — the worker owns them —
+        but the router no longer waits for them; idle instances are
+        still closed, so no backend worker processes leak)."""
+        with self._admin:
+            self._check_open()
+            return self._remove_worker_locked(shard, drain, drain_timeout)
+
+    def _remove_worker_locked(self, shard: int, drain: bool,
+                              drain_timeout: float) -> DrainReport:
+        with self._lock:
+            if shard not in self._by_shard:
+                raise KeyError(f"no live shard {shard} "
+                               f"(live: {sorted(self._by_shard)})")
+            if len(self._workers) == 1:
+                raise ValueError("cannot remove the last shard: a cluster "
+                                 "needs at least one worker")
+            worker = self._by_shard.pop(shard)
+            self._workers.remove(worker)
+            self._departed.append(shard)
+            self.removed += 1
+        worker.begin_drain()
+        report = DrainReport(shard=shard, drained=drain,
+                             inflight_at_removal=worker.load())
+        if drain:
+            # (2) warm-state handoff: every function holding an idle
+            # initialized instance here is prewarm-provisioned on the
+            # surviving neighbor the rebalance machinery would pick
+            threads = []
+            for fn in list(worker.scheduler.pools):
+                if worker.warm_total(fn) <= 0:
+                    continue
+                target = self._handoff_target(fn, exclude=shard)
+                if target is None:
+                    continue
+                threads.extend(target.prewarm(fn, provision=True))
+                report.handoffs.append((fn, target.shard_id))
+            for th in threads:
+                th.join(timeout=drain_timeout)
+            # (3) let in-flight and queued work finish: load counts busy
+            # instances plus blocked acquires, so zero means every future
+            # routed here has resolved
+            deadline = time.monotonic() + drain_timeout
+            while worker.load() > 0 and time.monotonic() < deadline:
+                time.sleep(0.002)
+        # (4) fold the shard's ledger into retained cluster history
+        self.accountant.retire(worker.scheduler.accountant)
+        # (5) shut the worker down (with drain this also waits for any
+        # router-thread stragglers before closing pools)
+        worker.shutdown(wait=drain)
+        if not drain:
+            # shutdown(wait=False) skips pool close; retire the pools so
+            # idle instances close now and instances busy at removal
+            # close when their invocation releases them — an undrained
+            # removal must not leak subprocess backend workers either way
+            for pool in list(worker.scheduler.pools.values()):
+                pool.retire()
+        return report
+
+    def _handoff_target(self, fn: str,
+                        exclude: int) -> Optional[ClusterWorker]:
+        """The rebalance neighbor choice: the surviving shard with the
+        most idle capacity for ``fn`` (then least loaded)."""
+        survivors = [w for w in self._eligible(fn) if w.shard_id != exclude]
+        if not survivors:
+            return None
+        return max(survivors, key=lambda n: (n.idle_capacity(fn), -n.load()))
 
     # -- routing --------------------------------------------------------
+    def _check_open(self):
+        if self._closed:
+            raise RuntimeError("ClusterRouter is shut down: no further "
+                               "routing or membership changes are possible")
+
     def _eligible(self, fn: str) -> List[ClusterWorker]:
-        return [w for w in self.workers if w.has_function(fn)]
+        with self._lock:
+            workers = list(self._workers)
+        return [w for w in workers if w.has_function(fn)]
 
     def has_function(self, fn: str) -> bool:
         return bool(self._eligible(fn))
@@ -228,6 +462,7 @@ class ClusterRouter:
         """The placement decision: which shard an arrival of ``fn`` goes
         to right now.  Used identically for invocations, oracle prewarms,
         and predictor-driven cross-shard freshen."""
+        self._check_open()
         eligible = self._eligible(fn)
         if not eligible:
             raise KeyError(f"function {fn!r} not registered on any shard")
@@ -238,11 +473,18 @@ class ClusterRouter:
         """Route one invocation; returns a Future.  With ``spill_timeout``
         set, saturation on the chosen shard drains the request to the
         neighbor with the most idle capacity instead of failing."""
+        self._check_open()
         shard = self.route(fn)
         if self.spill_timeout is None:
             with self._lock:
-                self.routed[shard] += 1
-            return self._by_shard[shard].submit(fn, args, freshen_successors)
+                worker = self._by_shard.get(shard)
+                self.routed[shard] = self.routed.get(shard, 0) + 1
+            if worker is None:       # removed between route() and here
+                return self.submit(fn, args, freshen_successors)
+            try:
+                return worker.submit(fn, args, freshen_successors)
+            except RuntimeError:     # began draining after the lookup
+                return self.submit(fn, args, freshen_successors)
         outer: Future = Future()
         self._attempt(fn, args, freshen_successors, shard, set(), outer)
         return outer
@@ -251,14 +493,30 @@ class ClusterRouter:
                  tried: set, outer: Future):
         tried.add(shard)
         with self._lock:
-            self.routed[shard] += 1
+            worker = self._by_shard.get(shard)
+            self.routed[shard] = self.routed.get(shard, 0) + 1
         rest = [w.shard_id for w in self._eligible(fn)
                 if w.shard_id not in tried]
+        if worker is None:
+            # the chosen shard departed between selection and submission:
+            # retry on a survivor (or fail loudly when none remains)
+            if rest:
+                self._attempt(fn, args, freshen, rest[0], tried, outer)
+            else:
+                outer.set_exception(KeyError(
+                    f"function {fn!r} not registered on any live shard"))
+            return
         # the last untried shard gets no timeout: the request must land
         # somewhere, and by then every alternative has been offered
         timeout = self.spill_timeout if rest else None
-        inner = self._by_shard[shard].submit(fn, args, freshen,
-                                             acquire_timeout=timeout)
+        try:
+            inner = worker.submit(fn, args, freshen, acquire_timeout=timeout)
+        except RuntimeError as e:    # began draining after the lookup
+            if rest:
+                self._attempt(fn, args, freshen, rest[0], tried, outer)
+            else:
+                outer.set_exception(e)
+            return
 
         def _done(f: Future):
             # Future._invoke_callbacks swallows callback exceptions, so any
@@ -272,17 +530,22 @@ class ClusterRouter:
                 if isinstance(exc, PoolSaturated) and rest:
                     with self._lock:
                         self.spills += 1
-                        self.saturations[shard] += 1
-                    nxt = max(rest, key=lambda s: (
-                        self._by_shard[s].idle_capacity(fn),
-                        -self._by_shard[s].load()))
-                    # the saturated attempt already ran prediction +
-                    # successor freshen for this arrival: a retry is the
-                    # same logical invocation, so it must not observe or
-                    # freshen again (double-counted inter-arrivals would
-                    # corrupt the recurrence histograms)
-                    self._attempt(fn, args, False, nxt, tried, outer)
-                    return
+                        self.saturations[shard] = \
+                            self.saturations.get(shard, 0) + 1
+                        # hold worker refs, not ids: a shard departing
+                        # after this snapshot must not fail the retry
+                        live = [(s, self._by_shard[s]) for s in rest
+                                if s in self._by_shard]
+                    if live:
+                        nxt = max(live, key=lambda sw: (
+                            sw[1].idle_capacity(fn), -sw[1].load()))[0]
+                        # the saturated attempt already ran prediction +
+                        # successor freshen for this arrival: a retry is the
+                        # same logical invocation, so it must not observe or
+                        # freshen again (double-counted inter-arrivals would
+                        # corrupt the recurrence histograms)
+                        self._attempt(fn, args, False, nxt, tried, outer)
+                        return
                 outer.set_exception(exc)
             except BaseException as e:                # noqa: BLE001
                 if not outer.done():
@@ -294,10 +557,17 @@ class ClusterRouter:
                      freshen: bool = True) -> Future:
         """Chains route by their head function and run whole on one shard:
         chain members share a runtime scope, which never spans workers."""
+        self._check_open()
         shard = self.route(fns[0])
         with self._lock:
-            self.routed[shard] += 1
-        return self._by_shard[shard].submit_chain(fns, args, freshen)
+            worker = self._by_shard.get(shard)
+            self.routed[shard] = self.routed.get(shard, 0) + 1
+        if worker is None:
+            return self.submit_chain(fns, args, freshen)
+        try:
+            return worker.submit_chain(fns, args, freshen)
+        except RuntimeError:         # began draining after the lookup
+            return self.submit_chain(fns, args, freshen)
 
     def invoke(self, fn: str, args=None, freshen_successors: bool = True):
         return self.submit(fn, args, freshen_successors).result()
@@ -313,7 +583,7 @@ class ClusterRouter:
         path — accounting gate included — run unchanged; otherwise the
         target shard's dispatch outcome (its own gate may still drop the
         prewarm, which must not count as a cross-shard freshen)."""
-        if not self.cross_freshen:
+        if not self.cross_freshen or self._closed:
             return None
         try:
             target = self.route(pred.fn)
@@ -323,8 +593,11 @@ class ClusterRouter:
             with self._lock:
                 self.local_freshens += 1
             return None
-        dispatched = self._by_shard[target].scheduler._dispatch_freshen(
-            pred, _routed=True)
+        with self._lock:
+            worker = self._by_shard.get(target)
+        if worker is None:
+            return None
+        dispatched = worker.scheduler._dispatch_freshen(pred, _routed=True)
         if dispatched:
             with self._lock:
                 self.cross_freshens += 1
@@ -333,8 +606,12 @@ class ClusterRouter:
     def prewarm(self, fn: str, provision: bool = True):
         """Externally-driven prewarm (oracle trace replay): freshen the
         shard the router would send the arrival to."""
-        return self._by_shard[self.route(fn)].prewarm(fn,
-                                                      provision=provision)
+        shard = self.route(fn)
+        with self._lock:
+            worker = self._by_shard.get(shard)
+        if worker is None:
+            return self.prewarm(fn, provision=provision)
+        return worker.prewarm(fn, provision=provision)
 
     # -- rebalancing ----------------------------------------------------
     def rebalance(self, min_queue_depth: int = 1) -> List[tuple]:
@@ -349,13 +626,9 @@ class ClusterRouter:
             for fn, pool in list(w.scheduler.pools.items()):
                 if pool.waiting_count() < min_queue_depth:
                     continue
-                neighbors = [n for n in self._eligible(fn)
-                             if n.shard_id != w.shard_id
-                             and n.idle_capacity(fn) > 0]
-                if not neighbors:
+                target = self._handoff_target(fn, exclude=w.shard_id)
+                if target is None or target.idle_capacity(fn) <= 0:
                     continue
-                target = max(neighbors,
-                             key=lambda n: (n.idle_capacity(fn), -n.load()))
                 target.prewarm(fn, provision=True)
                 actions.append((fn, w.shard_id, target.shard_id))
         return actions
@@ -363,13 +636,18 @@ class ClusterRouter:
     # -- lifecycle ------------------------------------------------------
     def stats(self) -> dict:
         with self._lock:
+            workers = list(self._workers)
             counters = {"policy": self.policy.name,
                         "routed": dict(self.routed),
                         "cross_freshens": self.cross_freshens,
                         "local_freshens": self.local_freshens,
                         "spills": self.spills,
-                        "saturations": dict(self.saturations)}
-        counters["shards"] = {w.shard_id: w.stats() for w in self.workers}
+                        "saturations": dict(self.saturations),
+                        "num_shards": len(workers),
+                        "added": self.added,
+                        "removed": self.removed,
+                        "departed": list(self._departed)}
+        counters["shards"] = {w.shard_id: w.stats() for w in workers}
         return counters
 
     def platform_stats(self) -> dict:
@@ -383,8 +661,20 @@ class ClusterRouter:
         return out
 
     def shutdown(self, wait: bool = True):
-        for w in self.workers:
-            w.shutdown(wait=wait)
+        """Shut every worker down and close the router: further ``submit``
+        / ``route`` / membership calls raise instead of silently routing
+        to dead shards.  Idempotent.  Serialized against membership
+        changes (``_admin``), so a worker being added concurrently either
+        lands before the snapshot and is shut down too, or its
+        ``add_worker`` call observes the closed router and raises."""
+        with self._admin:
+            with self._lock:
+                if self._closed:
+                    return
+                self._closed = True
+                workers = list(self._workers)
+            for w in workers:
+                w.shutdown(wait=wait)
 
 
 def partition_devices(devices: Optional[Sequence], num_shards: int

@@ -44,6 +44,9 @@ class ClusterWorker:
                  max_router_threads: int = 16):
         self.shard_id = shard_id
         self.devices = list(devices) if devices else None
+        # set by ClusterRouter.remove_worker: a draining shard finishes
+        # its in-flight work but admits nothing new
+        self.draining = False
         self.scheduler = FreshenScheduler(
             predictor=predictor, accountant=accountant,
             pool_config=pool_config, max_router_threads=max_router_threads)
@@ -95,18 +98,35 @@ class ClusterWorker:
     def has_function(self, fn: str) -> bool:
         return fn in self.scheduler.pools
 
+    def begin_drain(self):
+        """Stop admitting new invocations; in-flight work completes.
+        Called by ``ClusterRouter.remove_worker`` after the shard left
+        the routing set — a direct ``submit`` afterwards is a caller
+        holding a stale shard reference, and must fail loudly rather
+        than queue work on a shard about to shut down."""
+        self.draining = True
+
+    def _check_admitting(self):
+        if self.draining:
+            raise RuntimeError(
+                f"shard {self.shard_id} is draining (removed from its "
+                f"cluster): it accepts no new invocations")
+
     def submit(self, fn: str, args: Any = None,
                freshen_successors: bool = True,
                acquire_timeout: Optional[float] = None) -> Future:
+        self._check_admitting()
         return self.scheduler.submit(fn, args, freshen_successors,
                                      acquire_timeout)
 
     def submit_chain(self, fns: List[str], args: Any = None,
                      freshen: bool = True) -> Future:
+        self._check_admitting()
         return self.scheduler.submit_chain(fns, args, freshen)
 
     def invoke(self, fn: str, args: Any = None,
                freshen_successors: bool = True):
+        self._check_admitting()
         return self.scheduler.invoke(fn, args,
                                      freshen_successors=freshen_successors)
 
@@ -122,6 +142,13 @@ class ClusterWorker:
         warmth-aware policy's primary signal."""
         pool = self.scheduler.pools.get(fn)
         return pool.warm_idle_count() if pool is not None else 0
+
+    def warm_total(self, fn: str) -> int:
+        """Initialized instances of ``fn``, idle or busy — the drain
+        handoff's signal (warmth an in-flight invocation is borrowing
+        still needs a new home)."""
+        pool = self.scheduler.pools.get(fn)
+        return pool.warm_total_count() if pool is not None else 0
 
     def queue_depth(self, fn: Optional[str] = None) -> int:
         """Blocked acquires, for one function or the whole shard."""

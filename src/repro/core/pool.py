@@ -120,6 +120,7 @@ class InstancePool:
         self._idle: List[PooledInstance] = []     # LIFO stack
         self._next_id = 0
         self._waiting = 0
+        self._retired = False         # retire(): released instances close
         # counters (read under the lock via stats())
         self.cold_starts = 0          # acquires that landed on an uninit instance
         self.warm_acquires = 0
@@ -200,6 +201,14 @@ class InstancePool:
         with self._cond:
             return sum(1 for i in self._idle if i.runtime.initialized)
 
+    def warm_total_count(self) -> int:
+        """Initialized instances whether idle or busy — the warmth a
+        drain must not discard: a busy instance is warmth an in-flight
+        invocation merely borrowed."""
+        with self._cond:
+            return sum(1 for i in self._instances.values()
+                       if i.runtime.initialized)
+
     def waiting_count(self) -> int:
         """Acquires currently blocked waiting for an instance (queue
         depth) — the load signal cluster routing and rebalancing read."""
@@ -275,6 +284,16 @@ class InstancePool:
             self.reaped += len(dead)
         self._fold_and_close(dead, join_timeout=5.0)
 
+    def retire(self):
+        """``close()`` with no way back: instances released *after* this
+        call are closed instead of re-idled.  For pools on a shard that
+        left its cluster undrained — a busy instance finishing later
+        must not park a subprocess backend worker in an idle list nobody
+        will ever reap."""
+        with self._cond:
+            self._retired = True
+        self.close()
+
     def _pop_warmest_locked(self) -> PooledInstance:
         """Warmth-aware LIFO: prefer the most recently used *initialized*
         instance whose freshen is not mid-flight, so an arrival neither
@@ -348,11 +367,19 @@ class InstancePool:
         with self._cond:
             if inst.state is InstanceState.REAPED:
                 return
-            inst.state = InstanceState.IDLE
-            inst.last_used = self.clock()
             inst.invocations += 1
-            self._idle.append(inst)
-            self._cond.notify()
+            if self._retired:
+                inst.state = InstanceState.REAPED
+                del self._instances[inst.instance_id]
+                self.reaped += 1
+            else:
+                inst.state = InstanceState.IDLE
+                inst.last_used = self.clock()
+                self._idle.append(inst)
+                self._cond.notify()
+            retired = self._retired
+        if retired:
+            self._fold_and_close([inst], join_timeout=0.0)
 
     def reconfigure(self, config: PoolConfig) -> PoolConfig:
         """Swap the pool's sizing/lifecycle policy live; returns the old

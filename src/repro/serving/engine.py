@@ -254,7 +254,7 @@ class ServingEngine:
         return dataclasses.replace(self.scheduler.pool_config,
                                    keep_alive=600.0)
 
-    def _ensure_cluster(self, shards: int):
+    def _ensure_cluster(self, shards: int, elastic: bool = False):
         if self.cluster is None:
             from repro.cluster import ClusterRouter
             # the fabric shares the engine scheduler's predictor:
@@ -266,15 +266,44 @@ class ServingEngine:
                 predictor=self.scheduler.predictor,
                 spill_timeout=self.spill_timeout)
         elif shards > self.cluster.num_shards:
-            raise ValueError(
-                f"cluster already built with {self.cluster.num_shards} "
-                f"shards; deploy the widest endpoint first (asked for "
-                f"{shards})")
+            if not elastic:
+                raise ValueError(
+                    f"cluster already built with {self.cluster.num_shards} "
+                    f"shards; deploy the widest endpoint first (asked for "
+                    f"{shards}) or pass elastic=True to grow the fleet")
+            while self.cluster.num_shards < shards:
+                self.cluster.add_worker()
         return self.cluster
+
+    def scale_shards(self, n: int, drain: bool = True) -> int:
+        """Resize the sharded fabric to ``n`` shards at runtime.
+
+        Growing replays every *elastic* endpoint's registration onto the
+        new shards (``ClusterRouter.add_worker``); fixed-width deploys
+        (``elastic=False``) keep their width.  Shrinking drains the
+        newest shards first — warm endpoints are prewarm-provisioned onto
+        survivors and in-flight requests complete before each shard shuts
+        down.  Builds the fabric on first use so ``scale_shards`` can
+        precede the first sharded ``deploy``.  Returns the live shard
+        count."""
+        if n < 1:
+            raise ValueError(f"a fabric needs at least one shard (got {n})")
+        if self.cluster is None:
+            if n == 1:
+                return 1              # the base scheduler is the one shard
+            self._ensure_cluster(n)
+            return self.cluster.num_shards
+        while self.cluster.num_shards < n:
+            self.cluster.add_worker()
+        while self.cluster.num_shards > n:
+            victim = max(w.shard_id for w in self.cluster.workers)
+            self.cluster.remove_worker(victim, drain=drain)
+        return self.cluster.num_shards
 
     def deploy(self, ep: ModelEndpoint, pool_config=None,
                shards: Optional[int] = None,
-               backend: Optional[str] = None) -> Runtime:
+               backend: Optional[str] = None,
+               elastic: bool = False) -> Runtime:
         """Register an endpoint; with ``shards=N`` (N>1) it joins the
         sharded fabric: one ``InstancePool`` per shard behind the
         ``ClusterRouter`` (lazily built at the first sharded deploy),
@@ -288,19 +317,35 @@ class ServingEngine:
         ``ModelEndpoint``'s spec closes over live JAX state, so
         subprocess deploys need an importable spec — set
         ``FunctionSpec.ref`` (``"module:attr"``) on the spec the worker
-        should rebuild."""
+        should rebuild.
+
+        ``elastic=True`` makes the deploy fleet-elastic: asking for more
+        shards than the fabric currently has grows it (instead of
+        raising), and the endpoint registers cluster-wide — every shard
+        the fleet ever grows to (``add_worker`` / ``scale_shards``)
+        serves it too.  With ``shards`` omitted an elastic deploy joins
+        the fabric at its current size (building a 1-shard fabric when
+        none exists yet) rather than silently staying on the base
+        scheduler."""
         self.endpoints[ep.name] = ep
         if pool_config is None:
             pool_config = self._default_pool_config()
         if backend is not None:
             import dataclasses
             pool_config = dataclasses.replace(pool_config, backend=backend)
-        if shards is not None and shards > 1:
-            cluster = self._ensure_cluster(shards)
-            runtimes = cluster.register(ep.spec(), config=pool_config,
-                                        shards=range(shards))
+        if elastic or (shards is not None and shards > 1):
+            cluster = self._ensure_cluster(max(shards or 1, 1),
+                                           elastic=elastic)
+            # elastic churn leaves live shard ids non-contiguous (ids are
+            # never reused), so a fixed-width deploy takes the N lowest
+            # live ids, not range(N)
+            runtimes = cluster.register(
+                ep.spec(), config=pool_config,
+                # None = cluster-wide: elastic endpoints follow the fleet
+                shards=None if elastic else sorted(
+                    w.shard_id for w in cluster.workers)[:shards])
             self._clustered.add(ep.name)
-            rt = runtimes[0]
+            rt = min(runtimes.items())[1]
             rt.init()
             return rt
         rt = self.scheduler.register(ep.spec(), config=pool_config)
@@ -354,11 +399,14 @@ class ServingEngine:
 
     def latency_summary(self, app: str) -> dict:
         """Merged latency view across the base scheduler and every cluster
-        shard (raw-sample merge — percentiles do not compose)."""
+        shard (raw-sample merge — percentiles do not compose).  Shards
+        drained by an elastic shrink keep counting: their retained
+        ledgers are merged in, so the view never loses history."""
         from repro.cluster import ClusterAccountant
         accts = [self.scheduler.accountant]
         if self.cluster is not None:
             accts += [w.scheduler.accountant for w in self.cluster.workers]
+            accts += list(self.cluster.accountant.retired)
         return ClusterAccountant(accts).latency_summary(app)
 
     def close(self, wait: bool = True):

@@ -20,7 +20,7 @@ to platform policy:
   ``HistoryPolicy.adapt`` into live ``apply_pool_config``, per scheduler
   (or per cluster shard).
 """
-from repro.workloads.adapt import AdaptDaemon  # noqa: F401
+from repro.workloads.adapt import AdaptDaemon, FleetPolicy  # noqa: F401
 from repro.workloads.history import HistoryPolicy  # noqa: F401
 from repro.workloads.replay import ReplayReport, TraceReplayer  # noqa: F401
 from repro.workloads.trace import (FunctionProfile, InvocationEvent,  # noqa: F401

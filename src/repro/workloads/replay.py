@@ -16,12 +16,20 @@ arrival will be routed.
 *knows* the full schedule, so it dispatches a prewarm freshen to the
 target pool exactly ``oracle_lead`` trace-seconds before every arrival —
 the upper bound any predictor can reach.
+
+``controls`` makes the replay elastic-fleet-capable: a sequence of
+``(trace_time, callable)`` pairs fired in schedule order alongside the
+arrivals — e.g. ``(t, lambda: cluster.add_worker())`` resizes the fleet
+mid-replay, exercising reshard/drain under live open-loop traffic.  A
+control firing ``remove_worker(drain=True)`` blocks the replay clock
+while it drains; subsequent arrivals fire late and are reported as lag,
+exactly like any other platform stall under open-loop replay.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Callable, List, Optional, Sequence, Tuple
 
 from repro.core.accounting import percentile
 
@@ -35,6 +43,8 @@ class ReplayReport:
     prewarms: int = 0
     errors: int = 0
     skipped: int = 0               # events for unregistered functions
+    controls: int = 0              # control callables fired
+    control_errors: int = 0        # control callables that raised
     wall: float = 0.0              # wall seconds for the whole replay
     lag_p95: float = 0.0           # p95 of (actual - scheduled) fire time
     lags: List[float] = field(default_factory=list, repr=False)
@@ -48,7 +58,8 @@ class TraceReplayer:
                  time_scale: float = 1.0,
                  oracle_lead: Optional[float] = None,
                  args_fn=None, strict: bool = True,
-                 result_timeout: float = 120.0):
+                 result_timeout: float = 120.0,
+                 controls: Optional[Sequence[Tuple[float, Callable]]] = None):
         if time_scale <= 0:
             raise ValueError("time_scale must be positive")
         self.scheduler = scheduler
@@ -58,6 +69,9 @@ class TraceReplayer:
         self.args_fn = args_fn                 # (event) -> invocation args
         self.strict = strict
         self.result_timeout = result_timeout
+        # (trace_time, callable) fired once each in schedule order —
+        # fleet resizes, config pushes, fault injection
+        self.controls = list(controls or [])
 
     # ------------------------------------------------------------------
     def _schedule(self):
@@ -68,6 +82,11 @@ class TraceReplayer:
                 actions.append((max(0.0, ev.t - self.oracle_lead),
                                 "prewarm", ev))
             actions.append((ev.t, "invoke", ev))
+        for when, call in self.controls:
+            actions.append((when, "control", call))
+        # stable sort on timestamp only: controls are appended after the
+        # trace events, so a control tied with an arrival fires *after*
+        # it — schedule the control strictly earlier to precede one
         actions.sort(key=lambda a: a[0])
         return actions
 
@@ -80,8 +99,9 @@ class TraceReplayer:
         report = ReplayReport()
         actions = self._schedule()
         if self.strict:
-            missing = sorted({ev.fn for _, _, ev in actions
-                              if not self._registered(ev)})
+            missing = sorted({ev.fn for _, kind, ev in actions
+                              if kind != "control"
+                              and not self._registered(ev)})
             if missing:
                 raise KeyError(f"trace functions not registered: {missing}")
         futures = []
@@ -91,6 +111,15 @@ class TraceReplayer:
             delay = target - time.monotonic()
             if delay > 0:
                 time.sleep(delay)
+            if kind == "control":
+                report.controls += 1
+                try:
+                    ev()
+                except Exception:              # noqa: BLE001
+                    # a failed resize must not kill the replay: the
+                    # arrivals keep firing, the failure is reported
+                    report.control_errors += 1
+                continue
             if not self._registered(ev):
                 if kind == "invoke":     # count each trace event once,
                     report.skipped += 1  # not its oracle prewarm too
