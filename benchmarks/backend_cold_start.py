@@ -1,5 +1,5 @@
-"""Measured cold starts: thread vs subprocess instance backends, freshen
-on vs off.
+"""Measured cold starts: thread vs subprocess vs snapshot instance
+backends, freshen on vs off.
 
 Every cold-start number the platform reported before this benchmark came
 from a simulated ``time.sleep(cold_start_cost)``.  The subprocess backend
@@ -7,7 +7,13 @@ from a simulated ``time.sleep(cold_start_cost)``.  The subprocess backend
 worker process, and its cold start is the measured interpreter-spawn +
 module-import + ``init_fn`` time — the components vHive (arXiv/USENIX
 2021) identifies as dominating sandbox cold starts, and the quantity SPES
-(arXiv 2403.17574) tunes provisioning against.
+(arXiv 2403.17574) tunes provisioning against.  The snapshot backend
+attacks that measured cost the way REAP (arXiv 2101.09355) does: a
+pre-warmed per-function template process holds the interpreter and the
+recorded import working set, and each cold start is a fork + ``init_fn``
+restore — the `snapshot/freshen_off` row should land within ~2x of the
+freshen-on rows, where `subprocess/freshen_off` sits orders of magnitude
+above them.
 
 Workload: a single periodic function whose period exceeds the pool
 keep-alive, so every unassisted arrival lands on a scaled-to-zero pool and
@@ -24,6 +30,11 @@ path* and the arrival lands on a warm, freshened instance:
 * ``subprocess/freshen_on``   — freshen hides the measured cost: the
   headline row.  p95 here must sit near the warm service time, far below
   ``subprocess/freshen_off``.
+* ``snapshot/freshen_off``    — every arrival pays a *measured* fork +
+  ``init_fn`` restore from the pre-warmed template: cheap enough that
+  even the unassisted column sits near the freshen-on rows.
+* ``snapshot/freshen_on``     — freshen on top of cheap restores; the
+  floor of the table.
 
 CSV rows (stdout, via benchmarks/run.py — schema in docs/benchmarks.md):
 ``backend_cold_start/<backend>/freshen_<on|off>``; ``us_per_call`` is p95
@@ -58,8 +69,8 @@ KEEP_ALIVE = PERIOD * 0.48    # < PERIOD - LEAD: unassisted arrivals always
                               # find a scaled-to-zero pool; > LEAD: the
                               # prewarmed instance survives to its arrival
 SIMULATED_COLD = 0.15         # thread-backend sleep (the old simulation)
-FETCH_COST = 0.01             # freshen-plan resource fetch
-BODY_COST = 0.004             # function body proper
+FETCH_COST = 0.002            # freshen-plan resource fetch
+BODY_COST = 0.01              # function body proper
 APP = "bench"
 FN = "periodic_fn"
 
@@ -145,8 +156,9 @@ def _report(backend: str, on: dict, off: dict):
         print(f"{label:12s} {s['p50']*1e3:8.1f}ms {s['p95']*1e3:8.1f}ms "
               f"{s['cold_starts']:5d} {s['init_seconds']*1e3:9.1f} "
               f"{s['hits']:5d}", file=out)
-    kind = "MEASURED (interpreter spawn + imports)" \
-        if backend == "subprocess" else "simulated (configured sleep)"
+    kind = {"subprocess": "MEASURED (interpreter spawn + imports)",
+            "snapshot": "MEASURED (fork from pre-warmed template)",
+            }.get(backend, "simulated (configured sleep)")
     print(f"  cold-start cost here is {kind}; freshen-on hides it: "
           f"p95 {off['p95']*1e3:.1f}ms -> {on['p95']*1e3:.1f}ms", file=out)
 
@@ -154,7 +166,7 @@ def _report(backend: str, on: dict, off: dict):
 def run():
     """Harness entry (benchmarks/run.py): CSV rows name,us_per_call,derived."""
     rows = []
-    for backend in ("thread", "subprocess"):
+    for backend in ("thread", "subprocess", "snapshot"):
         off = _drive(backend, freshen_on=False)
         on = _drive(backend, freshen_on=True)
         _report(backend, on, off)

@@ -22,11 +22,28 @@ integral over live shards).  The elastic arm should hold p95 within ~2x
 of ``static4`` while spending well under its instance-seconds — near
 the ``static1`` floor, because between bursts it *is* a 1-shard fleet.
 
+Two further arms re-run the elastic fleet under the *measured* keep-alive
+floors the two measured backends impose (``HistoryPolicy.pool_config``'s
+``measured_cold_start`` floor — a pool must never reap faster than it can
+boot):
+
+* ``spawn_floor``   — cold start and keep-alive floor = one live-probed
+  subprocess boot (interpreter spawn + imports): expensive boots force
+  long retention, so idle instances bill through the gaps.
+* ``restore_floor`` — cold start and floor = one live-probed snapshot
+  fork-from-template restore: cheap restores let the same policy release
+  idle capacity almost immediately.  Success: ``restore_floor`` fleet
+  instance-seconds land well under ``spawn_floor``'s — the snapshot
+  backend's economics, shown at fleet level.
+
+Both floors can be pinned (``ELASTIC_SHARDS_SPAWN_FLOOR`` /
+``ELASTIC_SHARDS_RESTORE_FLOOR``, seconds) to make runs reproducible.
+
 CSV rows (stdout, via benchmarks/run.py — schema in docs/benchmarks.md):
 ``elastic_shards/<arm>``; ``us_per_call`` is p95 end-to-end latency in
 microseconds; ``derived`` packs p50/p99, cold counts/rate,
-instance-seconds, shard-seconds, peak/final shard counts, and the fleet
-actions taken.
+instance-seconds, shard-seconds, peak/final shard counts, the fleet
+actions taken, and (floor arms) floor_ms/keep_alive_ms.
 
 Run on CPU:  PYTHONPATH=src python benchmarks/elastic_shards.py
 (harness: PYTHONPATH=src:. python benchmarks/run.py elastic_shards;
@@ -36,11 +53,13 @@ import os
 import sys
 import threading
 import time
+from dataclasses import replace
 
 from repro.core import Accountant, FunctionSpec, PoolConfig, ServiceClass
 from repro.core.freshen import Action, FreshenPlan, PlanEntry
 from repro.cluster import ClusterRouter
-from repro.workloads import AdaptDaemon, FleetPolicy, Trace, TraceReplayer
+from repro.workloads import (AdaptDaemon, FleetPolicy, HistoryPolicy, Trace,
+                             TraceReplayer)
 
 FETCH_COST = 0.004       # seconds: the freshen-plan resource fetch
 COMPUTE_COST = 0.008     # seconds: the function body proper
@@ -62,10 +81,68 @@ FLEET = dict(min_shards=1, max_shards=4, scale_out_queue_depth=3,
 def _knobs():
     """(bursts, burst_size, arms); tiny under ELASTIC_SHARDS_SMOKE."""
     if os.environ.get("ELASTIC_SHARDS_SMOKE"):
-        return 2, 24, ("static1", "static4", "elastic")
+        return 2, 24, ("static1", "static4", "elastic",
+                       "spawn_floor", "restore_floor")
     return (int(os.environ.get("ELASTIC_SHARDS_BURSTS", "3")),
             int(os.environ.get("ELASTIC_SHARDS_BURST_SIZE", "64")),
-            ("static1", "static2", "static4", "elastic"))
+            ("static1", "static2", "static4", "elastic",
+             "spawn_floor", "restore_floor"))
+
+
+# -- measured keep-alive floors (spawn vs restore) -----------------------
+# Module-level probe spec: the subprocess/snapshot probes unpickle it by
+# reference (via run.py this module is ``benchmarks.elastic_shards``; the
+# __main__ guard below re-imports under that name for direct runs).
+def _probe_init(runtime):
+    import csv            # noqa: F401
+    import decimal        # noqa: F401
+    import sqlite3        # noqa: F401
+    runtime.scope["booted"] = True
+
+
+def _probe_code(ctx, args):
+    return args
+
+
+PROBE_SPEC = FunctionSpec("floor_probe", _probe_code, app=APP,
+                          init_fn=_probe_init)
+SPAWN_FLOOR_FALLBACK = 0.60      # seconds, if the live probe fails
+RESTORE_FLOOR_FALLBACK = 0.02
+
+
+def _floors() -> dict:
+    """Measured per-boot costs the floor arms replay: one live subprocess
+    spawn and one live snapshot fork-restore (off a pre-started template,
+    matching what a pool's instances actually pay).  Env overrides pin
+    either number; probe failure falls back to representative constants
+    so the benchmark always runs."""
+    floors = {}
+    env = {"spawn_floor": os.environ.get("ELASTIC_SHARDS_SPAWN_FLOOR"),
+           "restore_floor": os.environ.get("ELASTIC_SHARDS_RESTORE_FLOOR")}
+    fallback = {"spawn_floor": SPAWN_FLOOR_FALLBACK,
+                "restore_floor": RESTORE_FLOOR_FALLBACK}
+    if env["spawn_floor"] is None or env["restore_floor"] is None:
+        from repro.core import make_backend
+        from repro.core.backend import SnapshotBackend
+        from repro.core.backend_template import SnapshotTemplate
+        from repro.core.runtime import Runtime
+        try:
+            rt = Runtime(PROBE_SPEC, backend=make_backend("subprocess"))
+            rt.init()
+            fallback["spawn_floor"] = rt.init_seconds
+            rt.close()
+            tpl = SnapshotTemplate(PROBE_SPEC).start()
+            rt = Runtime(PROBE_SPEC, backend=SnapshotBackend(template=tpl))
+            rt.init()
+            fallback["restore_floor"] = rt.init_seconds
+            rt.close()
+            tpl.close()
+        except Exception as exc:              # noqa: BLE001
+            print(f"floor probe failed ({exc}); using fallback floors",
+                  file=sys.stderr)
+    for arm, override in env.items():
+        floors[arm] = float(override) if override else fallback[arm]
+    return floors
 
 
 def _trace(bursts: int, burst_size: int) -> Trace:
@@ -140,12 +217,30 @@ def _accountant() -> Accountant:
     return acct
 
 
-def _drive(arm: str, bursts: int, burst_size: int) -> dict:
+def _drive(arm: str, bursts: int, burst_size: int,
+           floors: dict = None) -> dict:
     trace = _trace(bursts, burst_size)
-    shards = {"static1": 1, "static2": 2, "static4": 4,
-              "elastic": 1}[arm]
+    shards = {"static1": 1, "static2": 2, "static4": 4, "elastic": 1,
+              "spawn_floor": 1, "restore_floor": 1}[arm]
     cfg = PoolConfig(max_instances=MAX_INSTANCES, keep_alive=KEEP_ALIVE,
                      cold_start_cost=COLD_START, prewarm_provision=True)
+    # floor arms: trace-learned per-function configs whose keep-alive is
+    # floored at the *measured* boot cost (HistoryPolicy.pool_config's
+    # measured_cold_start floor), and whose simulated cold start replays
+    # that same cost — a spawn-priced fleet must retain idle instances
+    # where a restore-priced fleet can release them
+    floor = floor_cfg = None
+    if arm in ("spawn_floor", "restore_floor"):
+        floor = floors[arm]
+        policy = HistoryPolicy().fit(trace)
+        base = replace(cfg, cold_start_cost=floor)
+        floor_cfg = {
+            fn: replace(policy.pool_config(fn, base=base,
+                                           measured_cold_start=floor),
+                        # Little's law sizes for the *average* minute;
+                        # keep the burst headroom the other arms get
+                        max_instances=MAX_INSTANCES)
+            for fn in trace.functions}
     cluster = ClusterRouter.build(shards, policy="least-loaded",
                                   pool_config=cfg, cross_freshen=True)
     cluster.accountant_factory = _accountant
@@ -154,9 +249,14 @@ def _drive(arm: str, bursts: int, burst_size: int) -> dict:
         acct.service_class[APP] = ServiceClass.LATENCY_SENSITIVE
         acct.disable_after = 10 ** 9
     for fn in trace.functions:
-        cluster.register(_spec(fn))
+        cluster.register(_spec(fn),
+                         config=floor_cfg[fn] if floor_cfg else None)
     daemon = None
-    if arm == "elastic":
+    if arm in ("elastic", "spawn_floor", "restore_floor"):
+        # adapt_pools stays off (configs are the arm's controlled input);
+        # the daemon still runs its keep-alive sweep, so idle instances
+        # are reaped through the traffic gaps — that sweep is what turns
+        # the lower restore floor into fewer instance-seconds
         daemon = AdaptDaemon(cluster=cluster, interval=DAEMON_INTERVAL,
                              fleet=FleetPolicy(**FLEET), adapt_pools=False)
     with _FleetMeter(cluster) as meter:
@@ -178,7 +278,10 @@ def _drive(arm: str, bursts: int, burst_size: int) -> dict:
         peak_instances=meter.peak_instances,
         final_shards=stats["num_shards"],
         added=stats["added"], removed=stats["removed"],
-        daemon_errors=daemon.errors if daemon is not None else 0)
+        daemon_errors=daemon.errors if daemon is not None else 0,
+        floor=floor,
+        keep_alive=(next(iter(floor_cfg.values())).keep_alive
+                    if floor_cfg else KEEP_ALIVE))
     return summary
 
 
@@ -188,15 +291,15 @@ def _report(results: dict):
     any_s = next(iter(results.values()))
     print(f"\n=== elastic_shards: bursty mix "
           f"({any_s['requests']} requests/run) ===", file=out)
-    print(f"{'':10s} {'p50':>8s} {'p95':>8s} {'cold':>5s} {'rate':>6s} "
-          f"{'inst-s':>8s} {'shard-s':>8s} {'peak':>5s} {'+/-':>5s}",
-          file=out)
+    print(f"{'':13s} {'p50':>8s} {'p95':>8s} {'cold':>5s} {'rate':>6s} "
+          f"{'inst-s':>8s} {'shard-s':>8s} {'peak':>5s} {'+/-':>5s} "
+          f"{'keepal':>7s}", file=out)
     for label, s in results.items():
-        print(f"{label:10s} {s['p50']*1e3:7.1f}ms {s['p95']*1e3:7.1f}ms "
+        print(f"{label:13s} {s['p50']*1e3:7.1f}ms {s['p95']*1e3:7.1f}ms "
               f"{s['cold_starts']:5d} {s['cold_start_rate']:6.2f} "
               f"{s['instance_seconds']:8.2f} {s['shard_seconds']:8.2f} "
-              f"{s['peak_shards']:5d} {s['added']:2d}/{s['removed']:<2d}",
-              file=out)
+              f"{s['peak_shards']:5d} {s['added']:2d}/{s['removed']:<2d} "
+              f"{s['keep_alive']*1e3:6.0f}ms", file=out)
     if "elastic" in results and "static4" in results:
         e, s4 = results["elastic"], results["static4"]
         if s4["p95"] > 0 and s4["instance_seconds"] > 0:
@@ -204,32 +307,57 @@ def _report(results: dict):
                   f"instance-seconds "
                   f"x{e['instance_seconds'] / s4['instance_seconds']:.2f}",
                   file=out)
+    if "spawn_floor" in results and "restore_floor" in results:
+        sp, re_ = results["spawn_floor"], results["restore_floor"]
+        if sp["instance_seconds"] > 0:
+            print(f"restore_floor vs spawn_floor: keep-alive floor "
+                  f"{sp['keep_alive']*1e3:.0f}ms -> "
+                  f"{re_['keep_alive']*1e3:.0f}ms, instance-seconds "
+                  f"x{re_['instance_seconds'] / sp['instance_seconds']:.2f} "
+                  f"(measured floors: spawn {sp['floor']*1e3:.0f}ms, "
+                  f"restore {re_['floor']*1e3:.0f}ms)", file=out)
 
 
 def run():
     """Harness entry (benchmarks/run.py): CSV rows name,us_per_call,derived."""
     bursts, burst_size, arms = _knobs()
-    results = {arm: _drive(arm, bursts, burst_size) for arm in arms}
+    floors = (_floors() if any(a.endswith("_floor") for a in arms) else None)
+    if floors:
+        print(f"measured keep-alive floors: "
+              f"spawn {floors['spawn_floor']*1e3:.1f}ms, "
+              f"restore {floors['restore_floor']*1e3:.1f}ms",
+              file=sys.stderr)
+    results = {arm: _drive(arm, bursts, burst_size, floors) for arm in arms}
     _report(results)
     rows = []
     for label, s in results.items():
+        derived = (f"p50us={s['p50']*1e6:.0f};"
+                   f"p99us={s['p99']*1e6:.0f};"
+                   f"cold={s['cold_starts']};"
+                   f"cold_rate={s['cold_start_rate']:.3f};"
+                   f"inst_s={s['instance_seconds']:.3f};"
+                   f"shard_s={s['shard_seconds']:.3f};"
+                   f"peak_shards={s['peak_shards']};"
+                   f"final_shards={s['final_shards']};"
+                   f"added={s['added']};"
+                   f"removed={s['removed']};"
+                   f"requests={s['requests']}")
+        if s.get("floor") is not None:
+            derived += (f";floor_ms={s['floor']*1e3:.1f}"
+                        f";keep_alive_ms={s['keep_alive']*1e3:.1f}")
         rows.append((f"elastic_shards/{label}",
-                     f"{s['p95'] * 1e6:.0f}",
-                     f"p50us={s['p50']*1e6:.0f};"
-                     f"p99us={s['p99']*1e6:.0f};"
-                     f"cold={s['cold_starts']};"
-                     f"cold_rate={s['cold_start_rate']:.3f};"
-                     f"inst_s={s['instance_seconds']:.3f};"
-                     f"shard_s={s['shard_seconds']:.3f};"
-                     f"peak_shards={s['peak_shards']};"
-                     f"final_shards={s['final_shards']};"
-                     f"added={s['added']};"
-                     f"removed={s['removed']};"
-                     f"requests={s['requests']}"))
+                     f"{s['p95'] * 1e6:.0f}", derived))
     return rows
 
 
 if __name__ == "__main__":
+    # re-import under the importable package name so the floor probes'
+    # subprocess/snapshot workers can resolve PROBE_SPEC's callables
+    # (__main__ does not pickle by reference)
+    _repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    if _repo_root not in sys.path:
+        sys.path.insert(0, _repo_root)
+    from benchmarks import elastic_shards as _mod
     print("name,us_per_call,derived")
-    for row in run():
+    for row in _mod.run():
         print(",".join(str(x) for x in row))

@@ -69,9 +69,10 @@ class ClusterWorker:
                  backend: Optional[str] = None) -> Runtime:
         """Register a function on this shard; its pool is shard-tagged so
         saturation errors name the shard.  ``backend`` selects the
-        instance backend (repro.core.backend); device pinning wraps the
-        function body in a closure and therefore requires the in-process
-        thread backend."""
+        instance backend (repro.core.backend: thread, subprocess, or
+        snapshot — a snapshot pool's fork template lives and dies with
+        this shard's pools); device pinning wraps the function body in a
+        closure and therefore requires the in-process thread backend."""
         if self.devices:
             chosen = backend or (config.backend if config
                                  else self.scheduler.pool_config.backend)

@@ -4,8 +4,12 @@ inference, triggers).  Model-agnostic; binds to JAX via repro.serving."""
 from repro.core.accounting import (Accountant, AppBill, ServiceClass,  # noqa: F401
                                    percentile)
 from repro.core.backend import (BackendError, InstanceBackend,  # noqa: F401
-                                SubprocessBackend, ThreadBackend,
-                                make_backend)
+                                SnapshotBackend, SubprocessBackend,
+                                ThreadBackend, make_backend)
+# NOTE: SnapshotTemplate is deliberately not re-exported here — the
+# template process runs as ``python -m repro.core.backend_template``, and
+# importing the submodule from the package __init__ would double-execute
+# it under runpy.  Import it from repro.core.backend_template directly.
 from repro.core.cache import FreshenCache  # noqa: F401
 from repro.core.pool import (InstancePool, InstanceState, PoolConfig,  # noqa: F401
                              PooledInstance, PoolSaturated)

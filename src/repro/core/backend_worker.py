@@ -19,6 +19,10 @@ Commands:
 * ``exit``    — acknowledge and terminate.  EOF on stdin (parent gone)
   also terminates, so workers never outlive their platform.
 
+The post-init command loop lives in ``serve()`` so snapshot-backend forks
+(``repro.core.backend_template``) speak the identical protocol over their
+unix-socket channel: one wire contract, two transports.
+
 File descriptor 1 is re-pointed at stderr before any user code runs: a
 function body that prints can never corrupt the protocol stream.
 """
@@ -47,6 +51,41 @@ def _resolve_spec(payload):
     return pickle.loads(payload["spec_pickle"])
 
 
+def serve(proto_in, proto_out, runtime) -> None:
+    """The booted-instance command loop (run/freshen/stats/exit), shared
+    by the pipe worker and snapshot-template forks.  Returns on ``exit``
+    or channel EOF; hook exceptions are reported as ``("err", tb)`` frames
+    and the loop continues — an instance survives a failing run hook."""
+    from repro.core.backend import read_frame, write_frame
+
+    while True:
+        msg = read_frame(proto_in)
+        if msg is None:                      # parent closed the channel
+            return
+        cmd, payload = msg
+        try:
+            if cmd == "run":
+                write_frame(proto_out, ("ok", runtime.run(payload)))
+            elif cmd == "freshen":
+                runtime.freshen(blocking=True)
+                write_frame(proto_out, ("ok", runtime.fr_state.stats()))
+            elif cmd == "stats":
+                stats = dict(runtime.fr_state.stats())
+                stats["run_count"] = runtime.run_count
+                stats["freshen_count"] = runtime.freshen_count
+                write_frame(proto_out, ("ok", stats))
+            elif cmd == "exit":
+                write_frame(proto_out, ("ok", None))
+                return
+            else:
+                write_frame(proto_out, ("err", f"unknown command {cmd!r}"))
+        except BaseException:
+            try:
+                write_frame(proto_out, ("err", traceback.format_exc()))
+            except (BrokenPipeError, OSError):
+                return
+
+
 def main() -> int:
     # claim the protocol channel, then point fd 1 at stderr so user-code
     # prints (and library chatter) land in the parent's stderr instead
@@ -57,10 +96,10 @@ def main() -> int:
     from repro.core.backend import read_frame, write_frame
 
     runtime = None
-    while True:
+    while runtime is None:
         msg = read_frame(proto_in)
         if msg is None:                      # parent closed the pipe
-            break
+            return 0
         cmd, payload = msg
         try:
             if cmd == "init":
@@ -76,26 +115,19 @@ def main() -> int:
                     "plan_len": len(runtime.fr_state.plan),
                     "pid": os.getpid(),
                 }))
-            elif cmd == "run":
-                write_frame(proto_out, ("ok", runtime.run(payload)))
-            elif cmd == "freshen":
-                runtime.freshen(blocking=True)
-                write_frame(proto_out, ("ok", runtime.fr_state.stats()))
-            elif cmd == "stats":
-                stats = dict(runtime.fr_state.stats())
-                stats["run_count"] = runtime.run_count
-                stats["freshen_count"] = runtime.freshen_count
-                write_frame(proto_out, ("ok", stats))
             elif cmd == "exit":
                 write_frame(proto_out, ("ok", None))
-                break
+                return 0
             else:
-                write_frame(proto_out, ("err", f"unknown command {cmd!r}"))
+                write_frame(proto_out, ("err",
+                                        f"not initialized (command {cmd!r})"))
         except BaseException:
+            runtime = None
             try:
                 write_frame(proto_out, ("err", traceback.format_exc()))
             except BrokenPipeError:
-                break
+                return 0
+    serve(proto_in, proto_out, runtime)
     return 0
 
 

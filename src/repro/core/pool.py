@@ -54,8 +54,9 @@ class PoolConfig:
     prewarm_busy_fallback: bool = True  # no idle instance: freshen a busy one
                                         # (seed behavior — fr_state is
                                         # thread-safe under the run hook)
-    backend: str = "thread"           # instance backend (repro.core.backend);
-                                      # a live change applies to instances
+    backend: str = "thread"           # instance backend (repro.core.backend:
+                                      # thread | subprocess | snapshot); a
+                                      # live change applies to instances
                                       # provisioned after it
 
 
@@ -126,6 +127,8 @@ class InstancePool:
         self.warm_acquires = 0
         self.queued_acquires = 0      # acquires that had to wait
         self.reaped = 0
+        self.dead_evictions = 0       # instances evicted because the backend
+                                      # substrate died (worker/fork gone)
         self.prewarm_dispatches = 0
         self.prewarm_provisioned = 0
         # lifetime fr_state counters of reaped instances, folded in by
@@ -135,13 +138,44 @@ class InstancePool:
         # measured init seconds of reaped instances: [sum, count] — keeps
         # measured_cold_start() a lifetime mean across instance churn
         self._reaped_init = [0.0, 0]
+        # snapshot-backend fork source: one template per (function, pool),
+        # shared by every instance the pool ever provisions.  Started
+        # eagerly at pool construction (= register time) so the template
+        # spawn + working-set record happen off the first arrival's
+        # critical path; closed with the pool (restartable).
+        self._template = None
+        if self.config.backend == "snapshot":
+            self._ensure_template().start()
         with self._cond:
             for _ in range(eager_instances):
                 self._create_locked()
 
     # -- construction ---------------------------------------------------
+    def _ensure_template(self):
+        if self._template is None:
+            from repro.core.backend_template import SnapshotTemplate
+            self._template = SnapshotTemplate(self.spec)
+        return self._template
+
+    @property
+    def template(self):
+        """The pool-owned ``SnapshotTemplate``, or None (non-snapshot
+        backends, or snapshot configured but nothing provisioned yet)."""
+        return self._template
+
+    def _attach_backend_locked(self, runtime: Runtime) -> Runtime:
+        """Pool-side backend wiring: a templateless ``SnapshotBackend``
+        gets the pool's shared template, so fork economics (one warm
+        template, many cheap restores) hold across instance churn."""
+        from repro.core.backend import SnapshotBackend
+        backend = runtime.backend
+        if isinstance(backend, SnapshotBackend) and backend.template is None:
+            backend.template = self._ensure_template()
+        return runtime
+
     def _create_locked(self) -> PooledInstance:
-        inst = PooledInstance(self._next_id, self._factory(),
+        inst = PooledInstance(self._next_id,
+                              self._attach_backend_locked(self._factory()),
                               created_at=self.clock(), last_used=self.clock())
         self._next_id += 1
         self._instances[inst.instance_id] = inst
@@ -151,7 +185,8 @@ class InstancePool:
     def adopt(self, runtime: Runtime) -> PooledInstance:
         """Install a caller-built Runtime as a pool instance (compat path)."""
         with self._cond:
-            inst = PooledInstance(self._next_id, runtime,
+            inst = PooledInstance(self._next_id,
+                                  self._attach_backend_locked(runtime),
                                   created_at=self.clock(),
                                   last_used=self.clock())
             self._next_id += 1
@@ -275,7 +310,9 @@ class InstancePool:
         keep-alive and close its runtime (terminating subprocess backend
         workers).  Busy instances are left to their in-flight invocation —
         drain first (``FreshenScheduler.shutdown(wait=True)`` does).  The
-        pool stays usable: a later acquire provisions fresh instances."""
+        pool stays usable: a later acquire provisions fresh instances.
+        A snapshot template is closed too (it is restartable, so that
+        later acquire transparently re-spawns it)."""
         with self._cond:
             dead, self._idle = self._idle, []
             for inst in dead:
@@ -283,6 +320,8 @@ class InstancePool:
                 del self._instances[inst.instance_id]
             self.reaped += len(dead)
         self._fold_and_close(dead, join_timeout=5.0)
+        if self._template is not None:
+            self._template.close()
 
     def retire(self):
         """``close()`` with no way back: instances released *after* this
@@ -326,59 +365,102 @@ class InstancePool:
         Returns ``(instance, queue_delay_seconds, cold_start)``.  Prefers
         the most recently used idle instance (LIFO — the one a prewarm
         freshen most likely touched); scales up when allowed; otherwise
-        blocks until a release, accumulating queueing delay."""
+        blocks until a release, accumulating queueing delay.
+
+        An idle instance whose backend substrate died (subprocess worker
+        or snapshot fork killed) is evicted here instead of handed out:
+        dropping it shrinks the pool, so the same loop iteration may then
+        scale up a fresh instance rather than fail the invocation."""
         t0 = time.monotonic()
         self.reap()
-        with self._cond:
-            waited = False
-            self._waiting += 1
-            try:
-                while True:
-                    if self._idle:
-                        inst = self._pop_warmest_locked()
-                        break
-                    if self._scale_up_allowed_locked():
-                        inst = self._create_locked()
-                        self._idle.remove(inst)
-                        break
-                    remaining = (None if timeout is None
-                                 else timeout - (time.monotonic() - t0))
-                    if remaining is not None and remaining <= 0:
-                        raise PoolSaturated(
-                            self.spec.name, queue_depth=self._waiting,
-                            pool_size=len(self._instances),
-                            max_instances=self.config.max_instances,
-                            shard=self.shard)
-                    waited = True
-                    self._cond.wait(remaining)
-            finally:
-                self._waiting -= 1
-            inst.state = InstanceState.BUSY
-            cold = not inst.runtime.initialized
-            if cold:
-                self.cold_starts += 1
-            else:
-                self.warm_acquires += 1
-            if waited:
-                self.queued_acquires += 1
+        doomed: List[PooledInstance] = []
+        try:
+            with self._cond:
+                waited = False
+                self._waiting += 1
+                try:
+                    while True:
+                        if self._idle:
+                            inst = self._pop_warmest_locked()
+                            if (inst.runtime.initialized
+                                    and not inst.runtime.healthy()):
+                                inst.state = InstanceState.REAPED
+                                del self._instances[inst.instance_id]
+                                self.dead_evictions += 1
+                                doomed.append(inst)
+                                continue
+                            break
+                        if self._scale_up_allowed_locked():
+                            inst = self._create_locked()
+                            self._idle.remove(inst)
+                            break
+                        remaining = (None if timeout is None
+                                     else timeout - (time.monotonic() - t0))
+                        if remaining is not None and remaining <= 0:
+                            raise PoolSaturated(
+                                self.spec.name, queue_depth=self._waiting,
+                                pool_size=len(self._instances),
+                                max_instances=self.config.max_instances,
+                                shard=self.shard)
+                        waited = True
+                        self._cond.wait(remaining)
+                finally:
+                    self._waiting -= 1
+                inst.state = InstanceState.BUSY
+                cold = not inst.runtime.initialized
+                if cold:
+                    self.cold_starts += 1
+                else:
+                    self.warm_acquires += 1
+                if waited:
+                    self.queued_acquires += 1
+        finally:
+            # close corpses outside the lock: stats/close on a dead
+            # channel backend must never stall other acquires
+            self._fold_and_close(doomed, join_timeout=0.0)
         return inst, time.monotonic() - t0, cold
 
+    def evict(self, inst: PooledInstance) -> bool:
+        """Evict one instance the caller knows is unusable (its backend
+        died mid-invocation).  Safe on busy or idle instances; returns
+        False if the instance was already gone.  The next acquire then
+        provisions fresh instead of re-failing on the corpse."""
+        with self._cond:
+            if inst.instance_id not in self._instances:
+                return False
+            if inst in self._idle:
+                self._idle.remove(inst)
+            inst.state = InstanceState.REAPED
+            del self._instances[inst.instance_id]
+            self.dead_evictions += 1
+            self._cond.notify()       # capacity freed: a waiter may scale up
+        self._fold_and_close([inst], join_timeout=0.0)
+        return True
+
     def release(self, inst: PooledInstance):
+        # liveness probe outside the lock (it may touch the backend); a
+        # dead substrate is evicted instead of re-idled, so no later
+        # acquire lands on a corpse and waits out keep-alive
+        dead = inst.runtime.initialized and not inst.runtime.healthy()
         with self._cond:
             if inst.state is InstanceState.REAPED:
                 return
             inst.invocations += 1
-            if self._retired:
+            if self._retired or dead:
                 inst.state = InstanceState.REAPED
                 del self._instances[inst.instance_id]
-                self.reaped += 1
+                if dead and not self._retired:
+                    self.dead_evictions += 1
+                else:
+                    self.reaped += 1
+                self._cond.notify()   # capacity freed: a waiter may scale up
             else:
                 inst.state = InstanceState.IDLE
                 inst.last_used = self.clock()
                 self._idle.append(inst)
                 self._cond.notify()
-            retired = self._retired
-        if retired:
+            closing = self._retired or dead
+        if closing:
             self._fold_and_close([inst], join_timeout=0.0)
 
     def reconfigure(self, config: PoolConfig) -> PoolConfig:
@@ -475,10 +557,12 @@ class InstancePool:
     def measured_cold_start(self) -> float:
         """Mean *measured* init seconds over every instance this pool ever
         initialized (live + reaped).  Under the subprocess backend this is
-        real interpreter-spawn + import + init_fn time — the number
-        retention policy should trade against (``HistoryPolicy.adapt``
-        floors keep-alive at it).  Falls back to the configured
-        ``cold_start_cost`` before anything has booted."""
+        real interpreter-spawn + import + init_fn time; under the snapshot
+        backend it is the fork-from-template *restore* time — in both
+        cases the number retention policy should trade against
+        (``HistoryPolicy.adapt`` and ``pool_config`` floor keep-alive at
+        it).  Falls back to the configured ``cold_start_cost`` before
+        anything has booted."""
         with self._cond:
             total, n = self._measured_init_locked()
         return total / n if n else self.config.cold_start_cost
@@ -494,8 +578,12 @@ class InstancePool:
                 "warm_acquires": self.warm_acquires,
                 "queued_acquires": self.queued_acquires,
                 "reaped": self.reaped,
+                "dead_evictions": self.dead_evictions,
                 "prewarm_dispatches": self.prewarm_dispatches,
                 "prewarm_provisioned": self.prewarm_provisioned,
                 "backend": self.config.backend,
-                "measured_init_mean": total / n if n else 0.0,
+                # same fallback as measured_cold_start(): before anything
+                # has booted, both report the configured cold_start_cost
+                "measured_init_mean": (total / n if n
+                                       else self.config.cold_start_cost),
             }

@@ -151,6 +151,13 @@ class Runtime:
         the instance ever booted."""
         return self.backend.freshen_stats(self)
 
+    def healthy(self) -> bool:
+        """Whether the execution substrate can still serve (a subprocess
+        worker or snapshot fork that died makes this False).  The pool
+        evicts unhealthy instances instead of re-idling them, so the next
+        acquire provisions fresh rather than re-failing on a corpse."""
+        return self.backend.alive(self)
+
     def close(self):
         """Release the execution substrate (terminates a subprocess
         backend's worker).  Thread backend: no-op.  Idempotent."""

@@ -124,8 +124,12 @@ class FreshenScheduler:
 
         ``backend`` overrides the pool config's instance backend
         (repro.core.backend): "thread" runs hooks in-process, "subprocess"
-        in a persistent worker process with measured cold starts.  Scope
-        groups are in-process state and require the thread backend."""
+        in a persistent worker process with measured cold starts,
+        "snapshot" in processes forked from a pre-warmed per-pool
+        template (measured fork+init cold starts; the template spawns
+        here, at register time, off the first arrival's critical path).
+        Scope groups are in-process state and require the thread
+        backend."""
         # each pool gets its own config copy: tuning one pool must never
         # mutate another's policy through the shared scheduler default
         cfg = config or replace(self.pool_config)

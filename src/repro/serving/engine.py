@@ -313,11 +313,13 @@ class ServingEngine:
 
         ``backend`` selects the instance backend (repro.core.backend):
         ``"subprocess"`` runs each instance in its own worker process so
-        cold starts are measured interpreter+import time.  A stock
-        ``ModelEndpoint``'s spec closes over live JAX state, so
-        subprocess deploys need an importable spec — set
-        ``FunctionSpec.ref`` (``"module:attr"``) on the spec the worker
-        should rebuild.
+        cold starts are measured interpreter+import time;
+        ``"snapshot"`` forks instances from a pre-warmed per-pool
+        template process so cold starts collapse to measured
+        fork + init_fn time.  A stock ``ModelEndpoint``'s spec closes
+        over live JAX state, so out-of-process deploys need an importable
+        spec — set ``FunctionSpec.ref`` (``"module:attr"``) on the spec
+        the worker should rebuild.
 
         ``elastic=True`` makes the deploy fleet-elastic: asking for more
         shards than the fabric currently has grows it (instead of
@@ -378,8 +380,11 @@ class ServingEngine:
         policy's history is live-reconfigured (keep-alive from the observed
         idle-time distribution, max_instances from Little's law), and the
         policy's inter-arrival histograms seed recurrence prediction so
-        periodic endpoints self-prewarm.  Returns ``{name: PoolConfig}``
-        for the pools that were retuned."""
+        periodic endpoints self-prewarm.  Each pool's *measured* cold
+        start is passed through as the keep-alive floor, so a pool on a
+        measured backend (subprocess spawn, snapshot restore) is never
+        retuned to reap faster than it can boot.  Returns
+        ``{name: PoolConfig}`` for the pools that were retuned."""
         applied = {}
         schedulers = [self.scheduler]
         if self.cluster is not None:
@@ -389,8 +394,9 @@ class ServingEngine:
                 pool = sched.pools.get(name)
                 if pool is None:
                     continue
-                cfg = policy.pool_config(name, base=pool.config,
-                                         time_scale=time_scale)
+                cfg = policy.pool_config(
+                    name, base=pool.config, time_scale=time_scale,
+                    measured_cold_start=pool.measured_cold_start())
                 sched.apply_pool_config(name, cfg)
                 applied[name] = cfg
         # one prime covers everything: cluster workers share this predictor

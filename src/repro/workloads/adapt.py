@@ -87,6 +87,7 @@ class AdaptDaemon:
                              "or both")
         self.passes = 0
         self.adaptations = 0
+        self.reaped_swept = 0                  # instances reaped by the sweep
         self.scale_outs = 0
         self.scale_ins = 0
         self.errors = 0                        # step() failures in the loop
@@ -126,8 +127,17 @@ class AdaptDaemon:
         ledger), then each pool is adapted against its app's summary.
         With a cluster attached, one fleet sizing decision follows."""
         applied: Dict[Tuple[int, str], PoolConfig] = {}
+        schedulers = self._live_schedulers()
+        # keep-alive sweep first, independent of adapt_pools: the pool's
+        # own reap() only runs inside acquire/prewarm_freshen, so a
+        # function that goes quiet would otherwise park its (subprocess/
+        # snapshot worker) instances forever — scale-to-zero needs a
+        # traffic-independent clock tick, and the daemon pass is it
+        for sched in schedulers:
+            for pool in list(sched.pools.values()):
+                self.reaped_swept += pool.reap()
         if self.adapt_pools:
-            for idx, sched in enumerate(self._live_schedulers()):
+            for idx, sched in enumerate(schedulers):
                 summaries: Dict[str, dict] = {}
                 for fn, pool in list(sched.pools.items()):
                     app = pool.spec.app

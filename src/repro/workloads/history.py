@@ -110,7 +110,9 @@ class HistoryPolicy:
 
     # -- policy outputs -------------------------------------------------
     def pool_config(self, fn: str, base: Optional[PoolConfig] = None,
-                    time_scale: float = 1.0) -> PoolConfig:
+                    time_scale: float = 1.0,
+                    measured_cold_start: Optional[float] = None
+                    ) -> PoolConfig:
         """Derive a PoolConfig for ``fn`` from its history.
 
         ``time_scale`` converts trace seconds to wall seconds (match the
@@ -120,6 +122,16 @@ class HistoryPolicy:
         keep the base keep-alive (no histogram to trust).  ``max_instances``
         is Little's law over the busiest minute: peak arrival rate x
         service time, floored at 1.
+
+        ``measured_cold_start`` is the pool's observed mean boot time
+        (``InstancePool.measured_cold_start``).  It matters under the
+        subprocess/snapshot backends, where ``base.cold_start_cost`` is
+        typically 0: without it a trace-derived config could set
+        keep-alive below the real boot time and reap faster than the
+        platform can provision.  The floor honors whichever of the
+        configured and measured costs is larger — which is also what lets
+        a cheap-restore (snapshot) backend *lower* the floor and release
+        idle capacity sooner than a full-spawn backend safely could.
         """
         base = base or PoolConfig()
         h = self._hist.get(fn)
@@ -129,9 +141,11 @@ class HistoryPolicy:
                                      self.keep_alive_percentile)
                           * self.keep_alive_margin * time_scale)
         keep_alive = min(keep_alive, self.keep_alive_cap)
-        # never reap faster than the pool can boot: below cold-start cost,
-        # keep-alive buys nothing and guarantees cold-start thrash
-        keep_alive = max(keep_alive, base.cold_start_cost)
+        # never reap faster than the pool can boot: below the (configured
+        # or measured) boot cost, keep-alive buys nothing and guarantees
+        # cold-start thrash
+        keep_alive = max(keep_alive, base.cold_start_cost,
+                         measured_cold_start or 0.0)
         max_instances = 1
         if h and h.peak_per_minute:
             # Little's law in wall time: compressing the trace clock

@@ -1,10 +1,14 @@
-"""Pluggable instance backends: the subprocess worker protocol, measured
-cold starts, and thread/subprocess behavioral parity.
+"""Pluggable instance backends: the subprocess worker protocol, the
+snapshot fork-from-template protocol, measured cold starts, dead-worker
+eviction, and thread/subprocess/snapshot behavioral parity.
 
-Specs used under the subprocess backend are built from MODULE-LEVEL
-callables: the worker process unpickles them by reference, importing this
-test module off the parent's propagated ``sys.path``.
+Specs used under the subprocess/snapshot backends are built from
+MODULE-LEVEL callables: the worker/template process unpickles them by
+reference, importing this test module off the parent's propagated
+``sys.path``.
 """
+import os
+import signal
 import time
 from concurrent.futures import wait
 
@@ -12,7 +16,9 @@ import pytest
 
 from repro.core import (BackendError, FreshenScheduler, FunctionSpec,
                         PoolConfig, make_backend)
-from repro.core.backend import SubprocessBackend, ThreadBackend
+from repro.core.backend import (SnapshotBackend, SubprocessBackend,
+                                ThreadBackend)
+from repro.core.backend_template import SnapshotTemplate
 from repro.core.freshen import Action, FreshenPlan, PlanEntry
 from repro.core.pool import InstancePool
 from repro.core.runtime import Runtime
@@ -62,6 +68,7 @@ def make_refd_spec():
 def test_make_backend_registry():
     assert isinstance(make_backend("thread"), ThreadBackend)
     assert isinstance(make_backend("subprocess"), SubprocessBackend)
+    assert isinstance(make_backend("snapshot"), SnapshotBackend)
     with pytest.raises(ValueError, match="unknown instance backend"):
         make_backend("firecracker")
 
@@ -176,12 +183,13 @@ def test_scheduler_shutdown_closes_subprocess_workers():
 
 def test_scope_group_requires_thread_backend():
     sched = FreshenScheduler()
-    with pytest.raises(ValueError, match="thread backend"):
-        sched.register(_spec("bk_scoped"), scope_group="g",
-                       backend="subprocess")
+    for backend in ("subprocess", "snapshot"):
+        with pytest.raises(ValueError, match="thread backend"):
+            sched.register(_spec("bk_scoped"), scope_group="g",
+                           backend=backend)
 
 
-@pytest.mark.parametrize("backend", ["thread", "subprocess"])
+@pytest.mark.parametrize("backend", ["thread", "subprocess", "snapshot"])
 def test_concurrent_submits_race_prewarm_across_backends(backend):
     """The freshen-concurrency contract holds per backend: submits racing
     prewarm dispatch all return correct results, and freshen work done in
@@ -203,3 +211,204 @@ def test_concurrent_submits_race_prewarm_across_backends(backend):
         assert stats["hits"] >= 6
     finally:
         sched.shutdown()
+
+
+# ======================================================================
+# snapshot backend: fork-from-template cold starts
+# ======================================================================
+def _ftp_init(rt):
+    # ftplib: stdlib but imported by nothing else here — a recognizable
+    # marker in the recorded import working set
+    import ftplib         # noqa: F401
+    rt.scope["booted"] = True
+
+
+def test_snapshot_runtime_end_to_end():
+    """Standalone snapshot backend: first boot spawns an owned template,
+    run/freshen/stats speak the same protocol as the pipe worker, and
+    close tears the owned template down with the instance."""
+    rt = Runtime(_spec("bk_snap"), backend=make_backend("snapshot"))
+    try:
+        rt.init()
+        assert rt.initialized
+        rt.freshen(blocking=True)
+        stats = rt.freshen_stats()
+        assert stats["freshened"] == 1 and stats["inline"] == 0
+        assert rt.run(7) == ("ok", 7, 123)
+        assert rt.freshen_stats()["hits"] >= 1
+    finally:
+        rt.close()
+    assert rt.backend.template is not None
+    assert not rt.backend.template.alive     # owned template closed too
+
+
+def test_snapshot_template_records_working_set_and_forks():
+    """REAP record phase: the first (probe) boot's imports are recorded
+    and prefetched, and forked instances are distinct processes serving
+    off the template."""
+    spec = FunctionSpec("bk_snap_ws", _code, plan_factory=_plan, app="bk",
+                        init_fn=_ftp_init)
+    tpl = SnapshotTemplate(spec)
+    try:
+        tpl.start()
+        assert tpl.alive and tpl.template_pid
+        assert "ftplib" in tpl.working_set    # init_fn's import, recorded
+        backend = SnapshotBackend(template=tpl)
+        rt = Runtime(spec, backend=backend)
+        try:
+            rt.init()
+            assert backend.child_pid not in (None, tpl.template_pid)
+            assert rt.run(3) == ("ok", 3, 123)
+        finally:
+            rt.close()
+        assert tpl.alive                      # instance close != template
+    finally:
+        tpl.close()
+    assert not tpl.alive
+
+
+def test_snapshot_pool_shares_template_and_closes_it_on_shutdown():
+    """One template per (function, pool): started eagerly at register
+    time, shared by every instance, closed by scheduler shutdown."""
+    sched = FreshenScheduler(pool_config=PoolConfig(
+        max_instances=2, keep_alive=300.0, backend="snapshot"))
+    try:
+        sched.register(_spec("bk_snap_pool"))
+        pool = sched.pool("bk_snap_pool")
+        tpl = pool.template
+        assert tpl is not None and tpl.alive  # eager: off the arrival path
+        assert sched.invoke("bk_snap_pool", 1,
+                            freshen_successors=False) == ("ok", 1, 123)
+        # the measured cold start is the fork+init restore — far below a
+        # full interpreter spawn
+        assert 0 < pool.measured_cold_start() < 0.2
+        assert all(i.runtime.backend.template is tpl
+                   for i in pool._instances.values())
+        assert pool.stats()["backend"] == "snapshot"
+    finally:
+        sched.shutdown()
+    assert not tpl.alive
+
+
+# ======================================================================
+# dead-worker eviction: a killed substrate must not strand its slot
+# ======================================================================
+def test_dead_idle_worker_evicted_on_next_acquire():
+    """Kill an idle instance's worker process: the next invocation must
+    succeed on a freshly provisioned instance without waiting out the
+    (deliberately huge) keep-alive."""
+    sched = FreshenScheduler(pool_config=PoolConfig(
+        max_instances=2, keep_alive=300.0, backend="subprocess"))
+    try:
+        sched.register(_spec("bk_dead"))
+        assert sched.invoke("bk_dead", 1,
+                            freshen_successors=False) == ("ok", 1, 123)
+        pool = sched.pool("bk_dead")
+        (inst,) = pool._instances.values()
+        proc = inst.runtime.backend._proc
+        proc.kill()
+        proc.wait()
+        assert not inst.runtime.healthy()
+        assert sched.invoke("bk_dead", 2,
+                            freshen_successors=False) == ("ok", 2, 123)
+        assert pool.stats()["dead_evictions"] == 1
+        assert pool.size() == 1               # corpse gone, replacement live
+    finally:
+        sched.shutdown()
+
+
+def _slow_code(ctx, args):
+    time.sleep(args)
+    return "done"
+
+
+def test_worker_killed_mid_run_fails_fast_and_is_evicted():
+    """Kill the worker while a run is in flight: the in-flight future
+    fails with BackendError (not a hang), release evicts the corpse, and
+    the next invocation provisions fresh."""
+    spec = FunctionSpec("bk_midkill", _slow_code, app="bk", init_fn=_init_fn)
+    sched = FreshenScheduler(pool_config=PoolConfig(
+        max_instances=1, keep_alive=300.0, backend="subprocess"))
+    try:
+        sched.register(spec)
+        fut = sched.submit("bk_midkill", 30, freshen_successors=False)
+        pool = sched.pool("bk_midkill")
+        deadline = time.monotonic() + 30
+        proc = None
+        while proc is None and time.monotonic() < deadline:
+            insts = list(pool._instances.values())
+            if insts and insts[0].runtime.initialized:
+                proc = insts[0].runtime.backend._proc
+            else:
+                time.sleep(0.01)
+        assert proc is not None, "instance never booted"
+        time.sleep(0.2)                       # let the run frame land
+        proc.kill()
+        with pytest.raises(BackendError, match="died during 'run'"):
+            fut.result(timeout=30)
+        assert sched.invoke("bk_midkill", 0.01,
+                            freshen_successors=False) == "done"
+        assert pool.stats()["dead_evictions"] == 1
+    finally:
+        sched.shutdown()
+
+
+def test_dead_snapshot_fork_evicted_template_survives():
+    """Killing a forked snapshot instance evicts that instance only; the
+    template keeps serving fresh forks."""
+    sched = FreshenScheduler(pool_config=PoolConfig(
+        max_instances=2, keep_alive=300.0, backend="snapshot"))
+    try:
+        sched.register(_spec("bk_snapdead"))
+        assert sched.invoke("bk_snapdead", 1,
+                            freshen_successors=False) == ("ok", 1, 123)
+        pool = sched.pool("bk_snapdead")
+        (inst,) = pool._instances.values()
+        os.kill(inst.runtime.backend.child_pid, signal.SIGKILL)
+        deadline = time.monotonic() + 10
+        while inst.runtime.healthy() and time.monotonic() < deadline:
+            time.sleep(0.01)                  # socket EOF surfaces the death
+        assert not inst.runtime.healthy()
+        assert sched.invoke("bk_snapdead", 2,
+                            freshen_successors=False) == ("ok", 2, 123)
+        assert pool.stats()["dead_evictions"] == 1
+        assert pool.template.alive
+    finally:
+        sched.shutdown()
+
+
+# ======================================================================
+# PYTHONPATH propagation: prepend, never clobber
+# ======================================================================
+def test_worker_env_prepends_sys_path_to_inherited_pythonpath(monkeypatch):
+    from repro.core.backend import worker_env
+    monkeypatch.setenv("PYTHONPATH", "/inherited/libs")
+    assert worker_env(["/a", "/b"])["PYTHONPATH"] == os.pathsep.join(
+        ["/a", "/b", "/inherited/libs"])
+    monkeypatch.delenv("PYTHONPATH")
+    assert worker_env(["/a"])["PYTHONPATH"] == "/a"
+
+
+def _pp_init(rt):
+    import snap_pp_probe                      # resolvable only via the
+    rt.scope["pp"] = snap_pp_probe.VALUE      # inherited PYTHONPATH
+
+
+def _pp_code(ctx, args):
+    return ctx.scope["pp"]
+
+
+@pytest.mark.parametrize("backend", ["subprocess", "snapshot"])
+def test_inherited_pythonpath_reaches_worker(tmp_path, monkeypatch, backend):
+    """A spec whose init imports a module visible only through the
+    caller's externally-set PYTHONPATH must boot: the worker env prepends
+    sys.path to the inherited value instead of clobbering it."""
+    (tmp_path / "snap_pp_probe.py").write_text("VALUE = 'from-pythonpath'\n")
+    monkeypatch.setenv("PYTHONPATH", str(tmp_path))
+    spec = FunctionSpec("bk_pp", _pp_code, app="bk", init_fn=_pp_init)
+    rt = Runtime(spec, backend=make_backend(backend))
+    try:
+        rt.init()
+        assert rt.run(None) == "from-pythonpath"
+    finally:
+        rt.close()

@@ -358,3 +358,47 @@ def test_chain_submit_through_pools():
     assert [f.result(timeout=30) for f in futs] == [(i + 1) * 2
                                                     for i in range(8)]
     sched.shutdown()
+
+
+# ----------------------------------------------------------------------
+# Daemon reap sweep + stats fallback
+def test_adapt_daemon_step_reaps_idle_pools_without_traffic():
+    """InstancePool.reap only runs inside acquire/prewarm_freshen, so a
+    function that goes quiet would park instances forever; the daemon's
+    per-pass sweep is the traffic-independent clock tick that returns the
+    pool to zero."""
+    from repro.workloads import AdaptDaemon
+
+    now = [0.0]
+    sched = FreshenScheduler(pool_config=PoolConfig(max_instances=2,
+                                                    keep_alive=10.0))
+    sched.register(_noop_spec("quiet"))
+    pool = sched.pools["quiet"]
+    pool.clock = lambda: now[0]
+    inst, _, _ = pool.acquire()
+    pool.release(inst)
+    assert pool.size() == 1
+    daemon = AdaptDaemon(sched, adapt_pools=False)
+    daemon.step()
+    assert pool.size() == 1                  # within keep-alive: untouched
+    now[0] = 20.0                            # idle gap, zero traffic
+    daemon.step()
+    assert pool.size() == 0                  # swept to zero by the daemon
+    assert daemon.reaped_swept == 1
+    sched.shutdown()
+
+
+def test_stats_and_measured_cold_start_agree_before_first_boot():
+    """Both views fall back to the configured cold_start_cost until a
+    boot has been measured — a dashboard reading stats() and a policy
+    reading measured_cold_start() must see the same number."""
+    pool = InstancePool(_noop_spec(), PoolConfig(cold_start_cost=0.15))
+    assert pool.measured_cold_start() == 0.15
+    assert pool.stats()["measured_init_mean"] == 0.15
+    inst, _, _ = pool.acquire()
+    inst.runtime.init()
+    pool.release(inst)
+    # once measured, both switch to the observed mean together
+    assert pool.measured_cold_start() == pool.stats()["measured_init_mean"]
+    assert pool.measured_cold_start() >= 0.15
+    pool.close()

@@ -330,3 +330,37 @@ def test_engine_adopt_trace_policy_retunes_pools_and_seeds_recurrence():
         assert pred is not None and pred.expected_delay == pytest.approx(1.0)
     finally:
         eng.close()
+
+
+def test_pool_config_floors_keep_alive_at_measured_cold_start():
+    """pool_config honors the measured boot cost exactly like adapt: a
+    10ms-gap trace under a measured 2s spawn must not derive a keep-alive
+    the platform cannot boot inside (base.cold_start_cost is 0 under the
+    measured backends, so the configured floor alone is no floor)."""
+    tr = Trace.periodic("f", period=0.01, invocations=10)
+    policy = HistoryPolicy().fit(tr)
+    base = PoolConfig(cold_start_cost=0.0)
+    assert policy.pool_config("f", base=base).keep_alive < 2.0
+    floored = policy.pool_config("f", base=base, measured_cold_start=2.0)
+    assert floored.keep_alive >= 2.0
+    # the larger of configured and measured wins
+    both = policy.pool_config("f", base=PoolConfig(cold_start_cost=3.0),
+                              measured_cold_start=2.0)
+    assert both.keep_alive >= 3.0
+
+
+def test_engine_adopt_trace_policy_passes_measured_cold_start_floor():
+    """adopt_trace_policy threads each pool's measured cold start into
+    pool_config, so a trace-derived retune never undercuts the boot time
+    the pool actually observed."""
+    eng = ServingEngine()
+    eng.scheduler.register(_noop_spec("tick2"))
+    pool = eng.scheduler.pool("tick2")
+    pool.measured_cold_start = lambda: 5.0    # as if boots took 5s
+    tr = Trace.periodic("tick2", period=0.01, invocations=10)
+    try:
+        applied = eng.adopt_trace_policy(HistoryPolicy().fit(tr))
+        assert applied["tick2"].keep_alive >= 5.0
+        assert eng.scheduler.pool("tick2").config.keep_alive >= 5.0
+    finally:
+        eng.close()
