@@ -1,0 +1,264 @@
+"""Graded warmth ladder: instance-seconds vs latency frontier, binary
+vs graded pools on a bursty + rare function mix.
+
+The binary pool (seed behavior) knows two states — warm (HOT) and gone —
+so every retention decision is all-or-nothing: hold a fully-warmed
+instance at full memory cost, or reap it and pay the *entire* cold start
+on the next arrival.  The graded pool (PR 7) walks the SPES-style warmth
+ladder instead (arXiv 2403.17574): keep-alive expiry demotes one rung per
+sweep (HOT -> INITIALIZED -> PROCESS), so a rarely-invoked function decays
+to a near-free PROCESS standby whose next arrival pays only the *init*
+share of the cold start — the sandbox-boot share (the dominant term, cf.
+vHive) is already banked.
+
+Workload (open-loop, deterministic, thread backend):
+
+* ``bursty`` — ``BURSTS`` bursts of ``BURST_ARRIVALS`` arrivals 60 ms
+  apart, bursts ``BURST_GAP`` apart.  Both arms HOT-prewarm at each burst
+  head (the prediction layer is held equal; only retention differs).
+* ``rare``   — arrivals every ``RARE_GAP`` seconds, longer than every
+  keep-alive's HOT rung.  The binary arm reaps between arrivals and pays
+  the full cold start every time; the graded arm decays to a PROCESS
+  standby and pays only the init share.
+
+Cost model: simulated cold start ``SIM_COLD`` with the default
+``process_boot_fraction`` (0.8), i.e. 120 ms sandbox boot + 30 ms
+init/plan.  Instance-seconds are metered by sampling each pool's
+``stats()["levels"]`` and weighting rungs by their relative memory/CPU
+residency: HOT 1.0 (full working set + freshened resources), INITIALIZED
+0.6 (working set, no freshened state), PROCESS 0.2 (bare interpreter),
+COLD 0.0.  ``raw_s`` (unweighted provisioned-seconds) rides along so the
+weighting is auditable.
+
+CSV rows (schema in docs/benchmarks.md):
+``warmth_levels/<binary|graded>/<bursty|rare>`` — ``us_per_call`` is p95
+end-to-end latency in µs; ``derived`` packs p50us / cold / partial /
+cold_rate / inst_s / raw_s / demotions.  A final
+``warmth_levels/verdict`` row publishes the rare-trace frontier ratios
+and ``graded_dominates=1`` iff graded spends <= 0.7x the binary
+instance-seconds at <= 1.2x its p95 — the acceptance gate CI greps for
+(``WARMTH_LEVELS_SMOKE=1`` shrinks the schedule for CI).
+
+Run: PYTHONPATH=src:. python benchmarks/run.py warmth_levels
+"""
+import os
+import sys
+import threading
+import time
+
+from repro.core import (FreshenScheduler, FunctionSpec, PoolConfig,
+                        ServiceClass, WarmthLevel)
+from repro.core.freshen import Action, FreshenPlan, PlanEntry
+from repro.workloads.adapt import AdaptDaemon
+
+_SMOKE = os.environ.get("WARMTH_LEVELS_SMOKE") == "1"
+BURSTS = int(os.environ.get("WARMTH_LEVELS_BURSTS", "2" if _SMOKE else "4"))
+BURST_ARRIVALS = int(os.environ.get("WARMTH_LEVELS_BURST_ARRIVALS",
+                                    "4" if _SMOKE else "6"))
+RARE_ARRIVALS = int(os.environ.get("WARMTH_LEVELS_RARE_ARRIVALS",
+                                   "5" if _SMOKE else "10"))
+BURST_GAP = 1.5               # seconds between burst heads
+INTRA_GAP = 0.06              # seconds between arrivals inside a burst
+RARE_GAP = 1.25               # rare-function inter-arrival
+LEAD = 0.25                   # prewarm dispatch ahead of each burst head
+SIM_COLD = 0.15               # full simulated cold start (thread backend);
+                              # process_boot_fraction 0.8 splits it into
+                              # 120ms sandbox boot + 30ms init/plan
+FETCH_COST = 0.002
+BODY_COST = 0.005
+TAIL = 1.2                    # post-traffic metering window: binary pools
+                              # hold full-weight instances here, graded
+                              # pools have demoted — the retention cost
+                              # the frontier exists to expose
+SAMPLE = 0.015                # meter sampling period
+
+# rung residency weights for weighted instance-seconds (see module doc)
+WEIGHTS = {"cold": 0.0, "process": 0.2, "initialized": 0.6, "hot": 1.0}
+
+BURSTY, RARE = "bursty_fn", "rare_fn"
+BURSTY_APP, RARE_APP = "bursty_app", "rare_app"
+
+
+def _init_fn(runtime):
+    runtime.scope["booted"] = True
+
+
+def _fetch():
+    time.sleep(FETCH_COST)
+    return {"resource": "model"}
+
+
+def _make_plan(runtime):
+    return FreshenPlan([PlanEntry("data", Action.FETCH, _fetch)])
+
+
+def _code(ctx, args):
+    data = ctx.fr_fetch(0)
+    time.sleep(BODY_COST)
+    return data["resource"]
+
+
+BURSTY_SPEC = FunctionSpec(BURSTY, _code, plan_factory=_make_plan,
+                           app=BURSTY_APP, init_fn=_init_fn)
+RARE_SPEC = FunctionSpec(RARE, _code, plan_factory=_make_plan,
+                         app=RARE_APP, init_fn=_init_fn)
+
+
+def _config(graded: bool, hot_window: float) -> PoolConfig:
+    cfg = PoolConfig(max_instances=2, keep_alive=1.0,
+                     cold_start_cost=SIM_COLD, prewarm_provision=True)
+    if graded:
+        # HOT only as long as the traffic pattern needs it, then decay;
+        # the near-free PROCESS rung covers the long tail
+        cfg.graded_warmth = True
+        cfg.keep_alive_hot = hot_window
+        cfg.keep_alive_initialized = hot_window
+        cfg.keep_alive_process = 10.0
+    return cfg
+
+
+class _Meter(threading.Thread):
+    """Samples each pool's per-rung census into weighted instance-seconds
+    (and raw provisioned-seconds, for auditing the weights)."""
+
+    def __init__(self, pools):
+        super().__init__(name="warmth-meter", daemon=True)
+        self.pools = pools
+        self.inst_seconds = {fn: 0.0 for fn in pools}
+        self.raw_seconds = {fn: 0.0 for fn in pools}
+        self._halt = threading.Event()
+
+    def run(self):
+        last = time.monotonic()
+        while not self._halt.wait(SAMPLE):
+            now = time.monotonic()
+            dt, last = now - last, now
+            for fn, pool in self.pools.items():
+                levels = pool.stats()["levels"]
+                self.inst_seconds[fn] += dt * sum(
+                    WEIGHTS[rung] * n for rung, n in levels.items())
+                self.raw_seconds[fn] += dt * sum(
+                    n for rung, n in levels.items() if rung != "cold")
+
+    def stop(self):
+        self._halt.set()
+        self.join()
+
+
+def _drive(graded: bool) -> dict:
+    sched = FreshenScheduler()
+    sched.accountant.service_class[BURSTY_APP] = ServiceClass.LATENCY_SENSITIVE
+    sched.accountant.service_class[RARE_APP] = ServiceClass.LATENCY_SENSITIVE
+    sched.register(BURSTY_SPEC, config=_config(graded, hot_window=0.2))
+    sched.register(RARE_SPEC, config=_config(graded, hot_window=0.15))
+    # open-loop schedule; prewarm LEAD ahead of each burst head in BOTH
+    # arms, so the arms differ only in retention policy
+    events = []
+    for b in range(BURSTS):
+        head = 0.3 + b * BURST_GAP
+        events.append(("prewarm", BURSTY, head - LEAD))
+        events += [("arrive", BURSTY, head + j * INTRA_GAP)
+                   for j in range(BURST_ARRIVALS)]
+    events += [("arrive", RARE, 0.5 + k * RARE_GAP)
+               for k in range(RARE_ARRIVALS)]
+    events.sort(key=lambda e: e[2])
+    # the daemon's sweep is the traffic-independent clock tick that walks
+    # the demotion ladder (and reaps the binary arm) between arrivals
+    daemon = AdaptDaemon(sched, interval=0.05, adapt_pools=False)
+    meter = _Meter({BURSTY: sched.pool(BURSTY), RARE: sched.pool(RARE)})
+    daemon.start()
+    meter.start()
+    try:
+        t0 = time.monotonic()
+        futs = {BURSTY: [], RARE: []}
+        for kind, fn, at in events:
+            delay = t0 + at - time.monotonic()
+            if delay > 0:
+                time.sleep(delay)
+            if kind == "prewarm":
+                sched.prewarm(fn, provision=True, level=WarmthLevel.HOT)
+            else:
+                futs[fn].append(sched.submit(fn, freshen_successors=False))
+        for fs in futs.values():
+            for f in fs:
+                f.result(timeout=120)
+        time.sleep(TAIL)
+        out = {}
+        for fn, app in ((BURSTY, BURSTY_APP), (RARE, RARE_APP)):
+            s = sched.accountant.latency_summary(app)
+            ps = sched.pool(fn).stats()
+            s.update(requests=len(futs[fn]),
+                     partial=ps["partial_cold_starts"],
+                     demotions=ps["demotions"],
+                     levels=ps["levels"])
+            out[fn] = s
+    finally:
+        meter.stop()
+        daemon.stop()
+        sched.shutdown()
+    for fn in out:
+        out[fn]["inst_seconds"] = meter.inst_seconds[fn]
+        out[fn]["raw_seconds"] = meter.raw_seconds[fn]
+    return out
+
+
+def _report(binary: dict, graded: dict):
+    out = sys.stderr
+    print(f"\n=== warmth_levels ({BURSTS}x{BURST_ARRIVALS} bursty + "
+          f"{RARE_ARRIVALS} rare arrivals) ===", file=out)
+    print(f"{'':16s} {'p50':>9s} {'p95':>9s} {'cold':>5s} {'part':>5s} "
+          f"{'inst-s':>7s} {'raw-s':>7s} {'demote':>6s}", file=out)
+    for arm, res in (("binary", binary), ("graded", graded)):
+        for fn in (BURSTY, RARE):
+            s = res[fn]
+            print(f"{arm + '/' + fn:16s} {s['p50']*1e3:8.1f}ms "
+                  f"{s['p95']*1e3:8.1f}ms {s['cold_starts']:5d} "
+                  f"{s['partial']:5d} {s['inst_seconds']:7.2f} "
+                  f"{s['raw_seconds']:7.2f} {s['demotions']:6d}", file=out)
+    bi, gr = binary[RARE], graded[RARE]
+    inst_ratio = gr["inst_seconds"] / max(bi["inst_seconds"], 1e-9)
+    p95_ratio = gr["p95"] / max(bi["p95"], 1e-9)
+    print(f"  rare-trace frontier: graded holds {inst_ratio:.2f}x the "
+          f"instance-seconds at {p95_ratio:.2f}x the p95 — partial-warm "
+          f"standbys turn full cold starts into init-only starts", file=out)
+
+
+def run():
+    """Harness entry (benchmarks/run.py): CSV rows name,us_per_call,derived."""
+    binary = _drive(graded=False)
+    graded = _drive(graded=True)
+    _report(binary, graded)
+    rows = []
+    for arm, res in (("binary", binary), ("graded", graded)):
+        for fn, label in ((BURSTY, "bursty"), (RARE, "rare")):
+            s = res[fn]
+            rows.append((
+                f"warmth_levels/{arm}/{label}",
+                f"{s['p95'] * 1e6:.0f}",
+                f"p50us={s['p50']*1e6:.0f};"
+                f"cold={s['cold_starts']};"
+                f"partial={s['partial']};"
+                f"cold_rate={s['cold_start_rate']:.2f};"
+                f"inst_s={s['inst_seconds']:.2f};"
+                f"raw_s={s['raw_seconds']:.2f};"
+                f"demotions={s['demotions']}"))
+    bi, gr = binary[RARE], graded[RARE]
+    inst_ratio = gr["inst_seconds"] / max(bi["inst_seconds"], 1e-9)
+    p95_ratio = gr["p95"] / max(bi["p95"], 1e-9)
+    dominates = int(inst_ratio <= 0.7 and p95_ratio <= 1.2)
+    rows.append((
+        "warmth_levels/verdict", "0",
+        f"rare_inst_ratio={inst_ratio:.2f};"
+        f"rare_p95_ratio={p95_ratio:.2f};"
+        f"graded_dominates={dominates}"))
+    return rows
+
+
+if __name__ == "__main__":
+    _repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    if _repo_root not in sys.path:
+        sys.path.insert(0, _repo_root)
+    from benchmarks import warmth_levels as _mod
+    print("name,us_per_call,derived")
+    for row in _mod.run():
+        print(",".join(str(x) for x in row))

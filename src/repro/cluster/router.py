@@ -76,10 +76,15 @@ class LeastLoadedPolicy:
 
 class WarmthAwarePolicy:
     """Prefer shards holding an idle warm instance of the target function;
-    among warm shards pick the warmest (then least loaded).  With no
-    warmth anywhere, fall back to ``fallback`` (least-loaded by default) —
-    which is also where a cross-shard prewarm will have been sent, so the
-    warmth this policy chases is the warmth the router itself placed."""
+    among warm shards pick the warmest (then least loaded).  The signal is
+    *level-weighted* (``ClusterWorker.warmth_weight``): a shard with a HOT
+    instance outranks one with only an INITIALIZED instance, which
+    outranks a PROCESS-rung standby — so under graded warmth an arrival
+    lands on the cheapest-to-serve shard, and under binary warmth the
+    ranking degenerates to the old idle-warm count.  With no warmth
+    anywhere, fall back to ``fallback`` (least-loaded by default) — which
+    is also where a cross-shard prewarm will have been sent, so the warmth
+    this policy chases is the warmth the router itself placed."""
 
     name = "warmth-aware"
 
@@ -87,11 +92,11 @@ class WarmthAwarePolicy:
         self.fallback = fallback or LeastLoadedPolicy()
 
     def select(self, fn: str, workers: Sequence[ClusterWorker]) -> int:
-        # read each shard's warmth once: the count is a locked snapshot,
+        # read each shard's warmth once: the score is a locked snapshot,
         # and re-reading could rank a shard on warmth it just lost
-        warmth = [(w.warm_idle(fn), w) for w in workers]
-        warm = [(n, -w.load(), -w.shard_id, w.shard_id)
-                for n, w in warmth if n > 0]
+        warmth = [(w.warmth_weight(fn), w) for w in workers]
+        warm = [(score, -w.load(), -w.shard_id, w.shard_id)
+                for score, w in warmth if score > 0]
         if warm:
             return max(warm)[3]
         return self.fallback.select(fn, workers)

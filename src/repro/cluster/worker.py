@@ -131,8 +131,8 @@ class ClusterWorker:
         return self.scheduler.invoke(fn, args,
                                      freshen_successors=freshen_successors)
 
-    def prewarm(self, fn: str, provision: bool = True):
-        return self.scheduler.prewarm(fn, provision=provision)
+    def prewarm(self, fn: str, provision: bool = True, level=None):
+        return self.scheduler.prewarm(fn, provision=provision, level=level)
 
     # -- routing signals ------------------------------------------------
     def pool(self, fn: str) -> Optional[InstancePool]:
@@ -150,6 +150,14 @@ class ClusterWorker:
         still needs a new home)."""
         pool = self.scheduler.pools.get(fn)
         return pool.warm_total_count() if pool is not None else 0
+
+    def warmth_weight(self, fn: str) -> float:
+        """Level-weighted idle warmth of ``fn`` here (HOT instance = 1.0,
+        PROCESS standby = 1/3): the graded routing signal — a shard
+        holding a HOT instance outranks one holding only a standby, which
+        still outranks a cold shard."""
+        pool = self.scheduler.pools.get(fn)
+        return pool.warmth_score() if pool is not None else 0.0
 
     def queue_depth(self, fn: Optional[str] = None) -> int:
         """Blocked acquires, for one function or the whole shard."""

@@ -19,5 +19,6 @@ from repro.core.network import TIERS, Connection, Tier  # noqa: F401
 from repro.core.prediction import (ChainGraph, HybridPredictor,  # noqa: F401
                                    MarkovPredictor, Prediction,
                                    RecurrencePredictor)
-from repro.core.runtime import FunctionSpec, RunContext, Runtime  # noqa: F401
-from repro.core.scheduler import FreshenScheduler  # noqa: F401
+from repro.core.runtime import (FunctionSpec, RunContext, Runtime,  # noqa: F401
+                                WarmthLevel)
+from repro.core.scheduler import FreshenScheduler, WarmthPolicy  # noqa: F401

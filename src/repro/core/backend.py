@@ -57,6 +57,7 @@ import time
 from typing import Any, BinaryIO, Dict, Optional, Tuple
 
 from repro.core.freshen import FreshenPlan, FreshenState
+from repro.core.runtime import WarmthLevel
 
 _FRESHEN_STAT_KEYS = ("freshened", "inline", "waits", "hits")
 
@@ -129,8 +130,19 @@ class InstanceBackend:
     ``Runtime`` keeps lifecycle bookkeeping (init lock, freshen threads,
     counters) and delegates the actual work here:
 
-    * ``boot(runtime)``    — perform the cold start (called once, under the
-      runtime's init lock).  On return the instance must be servable.
+    * ``boot_process(runtime)`` — pay the COLD->PROCESS rung (spawn the
+      sandbox/interpreter, no function init).  Called under the runtime's
+      init lock.
+    * ``boot_init(runtime)``    — pay the PROCESS->INITIALIZED rung
+      (``init_fn`` + freshen-plan build).  On return the instance must be
+      servable.  The default delegates to ``boot`` so legacy backends that
+      only implement the combined cold start keep working.
+    * ``boot(runtime)``    — the combined cold start (both rungs); kept
+      for direct callers and legacy subclasses.
+    * ``demote(runtime, level)`` — release the warmth rungs above
+      ``level`` (HOT->INITIALIZED invalidates fr caches; ->PROCESS tears
+      down the inited runtime, keeping the sandbox resident).  Called
+      under the runtime's init lock; default no-op.
     * ``run(runtime, args)``      — execute the run hook, returning the
       function result.
     * ``freshen(runtime)``        — execute the freshen hook to completion
@@ -150,6 +162,15 @@ class InstanceBackend:
     def boot(self, runtime) -> None:
         raise NotImplementedError
 
+    def boot_process(self, runtime) -> None:
+        pass
+
+    def boot_init(self, runtime) -> None:
+        self.boot(runtime)
+
+    def demote(self, runtime, level: WarmthLevel) -> None:
+        pass
+
     def run(self, runtime, args: Any) -> Any:
         raise NotImplementedError
 
@@ -168,18 +189,40 @@ class InstanceBackend:
 
 class ThreadBackend(InstanceBackend):
     """In-process execution — the seed behavior.  Cold start is the
-    configured simulated ``cold_start_cost`` sleep plus ``init_fn``."""
+    configured simulated ``cold_start_cost`` sleep plus ``init_fn``;
+    ``Runtime.process_boot_fraction`` splits the sleep between the
+    PROCESS rung (sandbox boot share) and the INITIALIZED rung
+    (init_fn/plan share), so partial warmth has a simulated per-level
+    cost just like the measured backends."""
 
     name = "thread"
 
     def boot(self, runtime) -> None:
+        self.boot_process(runtime)
+        self.boot_init(runtime)
+
+    def boot_process(self, runtime) -> None:
         if runtime.cold_start_cost:
-            time.sleep(runtime.cold_start_cost)
+            time.sleep(runtime.cold_start_cost
+                       * runtime.process_boot_fraction)
+
+    def boot_init(self, runtime) -> None:
+        if runtime.cold_start_cost:
+            time.sleep(runtime.cold_start_cost
+                       * (1.0 - runtime.process_boot_fraction))
         if runtime.spec.init_fn:
             runtime.spec.init_fn(runtime)
         plan = (runtime.spec.plan_factory(runtime)
                 if runtime.spec.plan_factory else FreshenPlan([]))
         runtime.fr_state = FreshenState(plan, clock=runtime.clock)
+
+    def demote(self, runtime, level: WarmthLevel) -> None:
+        if level < WarmthLevel.INITIALIZED:
+            # drop the inited runtime; keep the scope dict — shared scope
+            # groups alias it across instances and must stay coherent
+            runtime.fr_state = None
+        elif runtime.fr_state is not None:
+            runtime.fr_state.invalidate()
 
     def run(self, runtime, args: Any) -> Any:
         from repro.core.runtime import RunContext
@@ -278,8 +321,13 @@ class _ChannelBackend(InstanceBackend):
         self._stats_cache = {k: stats.get(k, 0) for k in _FRESHEN_STAT_KEYS}
         return dict(self._stats_cache)
 
+    def demote(self, runtime, level: WarmthLevel) -> None:
+        if self._channel() is None:
+            return                      # nothing resident to release
+        self._call("demote", {"level": int(level)})
+
     def alive(self, runtime) -> bool:
-        if not runtime.initialized:
+        if runtime.warmth == WarmthLevel.COLD:
             return True                 # nothing booted yet: boot provisions
         if self._dead:
             return False
@@ -289,9 +337,12 @@ class _ChannelBackend(InstanceBackend):
 class SubprocessBackend(_ChannelBackend):
     """One persistent worker process per instance; hooks run remotely.
 
-    The worker is spawned in ``boot`` (that *is* the cold start: interpreter
-    exec + repro import + spec import + ``init_fn``), then serves
-    ``run``/``freshen``/``stats`` commands over the pipe until ``close``.
+    The worker is spawned in ``boot_process`` (interpreter exec + repro
+    import + spec import — the PROCESS rung) and the function is inited by
+    ``boot_init`` (remote ``init_fn`` + plan build — the INITIALIZED
+    rung); both together are the measured cold start.  The worker then
+    serves ``run``/``freshen``/``stats``/``demote`` commands over the pipe
+    until ``close``.
     """
 
     name = "subprocess"
@@ -301,7 +352,7 @@ class SubprocessBackend(_ChannelBackend):
         self.python = python or sys.executable
         self._proc: Optional[subprocess.Popen] = None
         self.worker_init_seconds = 0.0     # init_fn+plan time inside worker
-        self.spawn_seconds = 0.0           # full measured cold start
+        self.spawn_seconds = 0.0           # measured spawn+import (PROCESS)
 
     # -- _ChannelBackend -------------------------------------------------
     def _channel(self) -> Optional[Tuple[BinaryIO, BinaryIO]]:
@@ -316,6 +367,10 @@ class SubprocessBackend(_ChannelBackend):
 
     # -- InstanceBackend -----------------------------------------------
     def boot(self, runtime) -> None:
+        self.boot_process(runtime)
+        self.boot_init(runtime)
+
+    def boot_process(self, runtime) -> None:
         payload = spec_payload(runtime.spec)
         payload["sys_path"] = [p for p in sys.path if p]
         env = worker_env(payload["sys_path"])
@@ -327,12 +382,19 @@ class SubprocessBackend(_ChannelBackend):
                 self._proc = subprocess.Popen(
                     [self.python, "-m", "repro.core.backend_worker"],
                     stdin=subprocess.PIPE, stdout=subprocess.PIPE, env=env)
-                reply = self._call("init", payload)
+                self._call("load", payload)
+        except BaseException:
+            self.close()     # remote load failed: reap the spawned worker
+            raise
+        self.spawn_seconds = time.monotonic() - t0
+
+    def boot_init(self, runtime) -> None:
+        try:
+            reply = self._call("init", {})
         except BaseException:
             self.close()     # remote init failed: reap the spawned worker
             raise
         self.worker_init_seconds = reply.get("init_seconds", 0.0)
-        self.spawn_seconds = time.monotonic() - t0
 
     def close(self) -> None:
         with self._lock:
@@ -394,6 +456,7 @@ class SnapshotBackend(_ChannelBackend):
         self._wfile: Optional[BinaryIO] = None
         self.child_pid: Optional[int] = None
         self.worker_init_seconds = 0.0  # init_fn+plan time inside the fork
+        self.fork_seconds = 0.0         # measured fork+connect (PROCESS)
         self.restore_seconds = 0.0      # full measured fork+init restore
 
     # -- _ChannelBackend -------------------------------------------------
@@ -423,6 +486,10 @@ class SnapshotBackend(_ChannelBackend):
 
     # -- InstanceBackend -----------------------------------------------
     def boot(self, runtime) -> None:
+        self.boot_process(runtime)
+        self.boot_init(runtime)
+
+    def boot_process(self, runtime) -> None:
         self._close_instance()   # a failed earlier boot must not leak a fork
         tpl = self.template
         if tpl is None:
@@ -432,13 +499,22 @@ class SnapshotBackend(_ChannelBackend):
             self._owns_template = True
         t0 = time.monotonic()
         tpl.start()              # idempotent; the pool normally pre-started
-        sock, rfile, wfile, info = tpl.fork_instance()
+        sock, rfile, wfile, info = tpl.fork_instance(init=False)
         with self._lock:
             self._sock, self._rfile, self._wfile = sock, rfile, wfile
             self.child_pid = info.get("pid")
             self._dead = False
-        self.worker_init_seconds = info.get("init_seconds", 0.0)
-        self.restore_seconds = time.monotonic() - t0
+        self.fork_seconds = time.monotonic() - t0
+
+    def boot_init(self, runtime) -> None:
+        t0 = time.monotonic()
+        try:
+            reply = self._call("init", {})
+        except BaseException:
+            self._close_instance()   # failed init must not leak the fork
+            raise
+        self.worker_init_seconds = reply.get("init_seconds", 0.0)
+        self.restore_seconds = self.fork_seconds + (time.monotonic() - t0)
 
     def _close_instance(self) -> None:
         with self._lock:

@@ -180,16 +180,21 @@ class SnapshotTemplate:
         if self.working_set:
             self._call("prefetch", self.working_set)
 
-    def fork_instance(self) -> Tuple[socket.socket, Any, Any, Dict]:
-        """Fork one instance off the template and drive its init.  Returns
-        ``(sock, rfile, wfile, info)`` with the instance booted and ready
-        for the ``serve`` protocol; ``info`` carries ``pid``,
-        ``init_seconds`` (the in-child init_fn + plan cost) and
-        ``plan_len``."""
+    def fork_instance(self,
+                      init: bool = True) -> Tuple[socket.socket, Any, Any,
+                                                  Dict]:
+        """Fork one instance off the template and (by default) drive its
+        init.  Returns ``(sock, rfile, wfile, info)`` ready for the
+        ``serve`` protocol; with ``init=True`` the instance is booted and
+        ``info`` carries ``pid``, ``init_seconds`` (the in-child init_fn +
+        plan cost) and ``plan_len``.  With ``init=False`` the fork is left
+        at the PROCESS rung — interpreter and working set warm, function
+        un-inited — and the caller drives ``init`` over the channel when
+        (if ever) it promotes the instance."""
         self.start()                     # lazy path for standalone backends
-        return self._fork_and_init(record=False)
+        return self._fork_and_init(record=False, init=init)
 
-    def _fork_and_init(self, record: bool):
+    def _fork_and_init(self, record: bool, init: bool = True):
         with self._lock:
             self._fork_seq += 1
             token = self._fork_seq
@@ -213,6 +218,8 @@ class SnapshotTemplate:
                     f"forked instance of {self.spec.name!r} sent a bad "
                     f"hello: {hello!r}")
             self.forks += 1
+        if not init:                     # PROCESS-rung standby fork
+            return conn, rfile, wfile, {"pid": hello[1].get("pid")}
         # init outside the lock: slow init_fns must not serialize every
         # other fork behind this one
         try:
@@ -295,36 +302,19 @@ def _reap_children() -> None:
 
 
 def _child_serve(spec, sock_path: str, token: int) -> None:
-    """Forked-instance main: connect back, identify, boot, serve."""
-    import traceback
-
+    """Forked-instance main: connect back, identify, serve.  The spec is
+    pre-loaded (the template resolved it), so the fork enters the shared
+    ``backend_worker.serve`` loop at the PROCESS rung and the platform's
+    ``init`` command — sent immediately for a full boot, or later (if
+    ever) for a PROCESS-rung standby — climbs it to INITIALIZED."""
     from repro.core.backend_worker import serve
-    from repro.core.runtime import Runtime
 
     sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
     sock.connect(sock_path)
     rfile = sock.makefile("rb")
     wfile = sock.makefile("wb")
     write_frame(wfile, ("hello", {"token": token, "pid": os.getpid()}))
-    msg = read_frame(rfile)
-    if msg is None or msg[0] != "init":
-        return
-    record = bool(msg[1].get("record"))
-    baseline = set(sys.modules) if record else None
-    try:
-        runtime = Runtime(spec)          # thread-backed inside the fork
-        runtime.init()
-    except BaseException:
-        write_frame(wfile, ("err", traceback.format_exc()))
-        return
-    info = {
-        "init_seconds": runtime.init_seconds,
-        "plan_len": len(runtime.fr_state.plan),
-    }
-    if record:
-        info["imported"] = sorted(set(sys.modules) - baseline)
-    write_frame(wfile, ("ok", info))
-    serve(rfile, wfile, runtime)
+    serve(rfile, wfile, spec=spec)
 
 
 def main() -> int:

@@ -5,23 +5,37 @@ Spawned by ``repro.core.backend.SubprocessBackend`` as
 pickle frame protocol on stdin/stdout: the parent sends ``(cmd, payload)``
 and gets back ``("ok", result)`` or ``("err", traceback_text)``.
 
+The command loop mirrors the warmth ladder: a freshly spawned worker *is*
+the PROCESS rung (interpreter up, function un-inited), ``init`` climbs to
+INITIALIZED, and ``demote`` walks back down without tearing the process
+down.
+
 Commands:
 
-* ``init``    — extend ``sys.path``, materialize the ``FunctionSpec``
+* ``load``    — extend ``sys.path`` and materialize the ``FunctionSpec``
   (``spec_ref`` = ``"module:attr"`` resolving to a spec or a zero-arg
-  factory, else ``spec_pickle`` bytes), build a thread-backed ``Runtime``
-  and run its init hook.  The wall time the *parent* measures around this
-  round-trip — interpreter exec, imports, ``init_fn`` — is the real cold
-  start.
+  factory, else ``spec_pickle`` bytes).  No runtime is built: the wall
+  time the parent measures around spawn + this round-trip is the PROCESS
+  rung's cost.
+* ``init``    — build a thread-backed ``Runtime`` from the loaded spec
+  and run its init hook (``init_fn`` + plan build — the INITIALIZED
+  rung).  For compat the payload may carry the spec/sys_path inline
+  (legacy single-shot boot); ``record: true`` additionally reports the
+  modules the init pulled in beyond the pre-init baseline (the snapshot
+  template's REAP working-set probe).
+* ``demote``  — release warmth: ``level >= 2`` invalidates the fr caches
+  (HOT -> INITIALIZED); ``level <= 1`` drops the runtime entirely while
+  the process stays resident (-> PROCESS).
 * ``run``     — execute the run hook with the unpickled args.
 * ``freshen`` — execute the freshen hook (Algorithm 2) to completion.
 * ``stats``   — fr_state counters plus run/freshen hook counts.
 * ``exit``    — acknowledge and terminate.  EOF on stdin (parent gone)
   also terminates, so workers never outlive their platform.
 
-The post-init command loop lives in ``serve()`` so snapshot-backend forks
+The loop lives in ``serve()`` so snapshot-backend forks
 (``repro.core.backend_template``) speak the identical protocol over their
-unix-socket channel: one wire contract, two transports.
+unix-socket channel: one wire contract, two transports (a fork enters
+``serve`` with its spec pre-loaded — the template already resolved it).
 
 File descriptor 1 is re-pointed at stderr before any user code runs: a
 function body that prints can never corrupt the protocol stream.
@@ -51,12 +65,20 @@ def _resolve_spec(payload):
     return pickle.loads(payload["spec_pickle"])
 
 
-def serve(proto_in, proto_out, runtime) -> None:
-    """The booted-instance command loop (run/freshen/stats/exit), shared
-    by the pipe worker and snapshot-template forks.  Returns on ``exit``
-    or channel EOF; hook exceptions are reported as ``("err", tb)`` frames
-    and the loop continues — an instance survives a failing run hook."""
+def _extend_sys_path(payload) -> None:
+    for p in payload.get("sys_path", []):
+        if p and p not in sys.path:
+            sys.path.append(p)
+
+
+def serve(proto_in, proto_out, runtime=None, spec=None) -> None:
+    """The instance command loop, shared by the pipe worker and snapshot-
+    template forks.  Returns on ``exit`` or channel EOF; hook exceptions
+    are reported as ``("err", tb)`` frames and the loop continues — an
+    instance survives a failing run hook, and a failing ``init`` leaves
+    the worker at the PROCESS rung for a clean retry."""
     from repro.core.backend import read_frame, write_frame
+    from repro.core.runtime import Runtime, WarmthLevel
 
     while True:
         msg = read_frame(proto_in)
@@ -64,16 +86,65 @@ def serve(proto_in, proto_out, runtime) -> None:
             return
         cmd, payload = msg
         try:
-            if cmd == "run":
-                write_frame(proto_out, ("ok", runtime.run(payload)))
+            if cmd == "load":
+                _extend_sys_path(payload)
+                spec = _resolve_spec(payload)
+                runtime = None
+                write_frame(proto_out, ("ok", {"pid": os.getpid()}))
+            elif cmd == "init":
+                payload = payload or {}
+                if "spec_ref" in payload or "spec_pickle" in payload:
+                    _extend_sys_path(payload)
+                    spec = _resolve_spec(payload)
+                if spec is None:
+                    write_frame(proto_out,
+                                ("err", "no spec loaded (command 'init')"))
+                    continue
+                record = bool(payload.get("record"))
+                baseline = set(sys.modules) if record else None
+                runtime = None
+                rt = Runtime(spec)           # thread-backed inside the worker
+                rt.init()
+                runtime = rt
+                info = {
+                    "init_seconds": runtime.init_seconds,
+                    "plan_len": len(runtime.fr_state.plan),
+                    "pid": os.getpid(),
+                }
+                if record:
+                    info["imported"] = sorted(set(sys.modules) - baseline)
+                write_frame(proto_out, ("ok", info))
+            elif cmd == "demote":
+                level = WarmthLevel(int((payload or {}).get("level", 0)))
+                if runtime is not None:
+                    if level >= WarmthLevel.INITIALIZED:
+                        runtime.demote_to(level)
+                    else:
+                        runtime = None       # process stays resident
+                write_frame(proto_out, ("ok", {"level": int(level)}))
+            elif cmd == "run":
+                if runtime is None:
+                    write_frame(proto_out,
+                                ("err", "not initialized (command 'run')"))
+                else:
+                    write_frame(proto_out, ("ok", runtime.run(payload)))
             elif cmd == "freshen":
-                runtime.freshen(blocking=True)
-                write_frame(proto_out, ("ok", runtime.fr_state.stats()))
+                if runtime is None:
+                    write_frame(proto_out,
+                                ("err",
+                                 "not initialized (command 'freshen')"))
+                else:
+                    runtime.freshen(blocking=True)
+                    write_frame(proto_out, ("ok", runtime.fr_state.stats()))
             elif cmd == "stats":
-                stats = dict(runtime.fr_state.stats())
-                stats["run_count"] = runtime.run_count
-                stats["freshen_count"] = runtime.freshen_count
-                write_frame(proto_out, ("ok", stats))
+                if runtime is None:
+                    write_frame(proto_out,
+                                ("err", "not initialized (command 'stats')"))
+                else:
+                    stats = dict(runtime.fr_state.stats())
+                    stats["run_count"] = runtime.run_count
+                    stats["freshen_count"] = runtime.freshen_count
+                    write_frame(proto_out, ("ok", stats))
             elif cmd == "exit":
                 write_frame(proto_out, ("ok", None))
                 return
@@ -92,42 +163,7 @@ def main() -> int:
     proto_out = os.fdopen(os.dup(sys.stdout.fileno()), "wb")
     os.dup2(sys.stderr.fileno(), sys.stdout.fileno())
     proto_in = sys.stdin.buffer
-
-    from repro.core.backend import read_frame, write_frame
-
-    runtime = None
-    while runtime is None:
-        msg = read_frame(proto_in)
-        if msg is None:                      # parent closed the pipe
-            return 0
-        cmd, payload = msg
-        try:
-            if cmd == "init":
-                for p in payload.get("sys_path", []):
-                    if p and p not in sys.path:
-                        sys.path.append(p)
-                spec = _resolve_spec(payload)
-                from repro.core.runtime import Runtime
-                runtime = Runtime(spec)      # thread-backed inside the worker
-                runtime.init()
-                write_frame(proto_out, ("ok", {
-                    "init_seconds": runtime.init_seconds,
-                    "plan_len": len(runtime.fr_state.plan),
-                    "pid": os.getpid(),
-                }))
-            elif cmd == "exit":
-                write_frame(proto_out, ("ok", None))
-                return 0
-            else:
-                write_frame(proto_out, ("err",
-                                        f"not initialized (command {cmd!r})"))
-        except BaseException:
-            runtime = None
-            try:
-                write_frame(proto_out, ("err", traceback.format_exc()))
-            except BrokenPipeError:
-                return 0
-    serve(proto_in, proto_out, runtime)
+    serve(proto_in, proto_out)
     return 0
 
 

@@ -37,7 +37,7 @@ from enum import Enum
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.backend import make_backend
-from repro.core.runtime import FunctionSpec, Runtime
+from repro.core.runtime import FunctionSpec, Runtime, WarmthLevel
 
 
 @dataclass
@@ -58,6 +58,18 @@ class PoolConfig:
                                       # thread | subprocess | snapshot); a
                                       # live change applies to instances
                                       # provisioned after it
+    # -- graded warmth (SPES-style partial-warm ladder) ------------------
+    graded_warmth: bool = False       # keep-alive expiry demotes one warmth
+                                      # rung per sweep instead of reaping
+    process_boot_fraction: float = 0.8  # thread backend: share of the
+                                        # simulated cold start that is
+                                        # sandbox boot (PROCESS rung)
+    # per-level idle limits; None falls back to ``keep_alive``.  An
+    # instance idle at a rung past its limit drops one rung (HOT ->
+    # INITIALIZED -> PROCESS); past the PROCESS limit it is reaped.
+    keep_alive_hot: Optional[float] = None
+    keep_alive_initialized: Optional[float] = None
+    keep_alive_process: Optional[float] = None
 
 
 class InstanceState(Enum):
@@ -74,6 +86,7 @@ class PooledInstance:
     state: InstanceState = InstanceState.IDLE
     created_at: float = 0.0
     last_used: float = 0.0
+    level_since: float = 0.0          # when the current warmth rung was set
     invocations: int = 0
 
 
@@ -115,7 +128,9 @@ class InstancePool:
         self._factory = runtime_factory or (
             lambda: Runtime(spec, cold_start_cost=self.config.cold_start_cost,
                             clock=clock,
-                            backend=make_backend(self.config.backend)))
+                            backend=make_backend(self.config.backend),
+                            process_boot_fraction=self.config
+                            .process_boot_fraction))
         self._cond = threading.Condition()
         self._instances: Dict[int, PooledInstance] = {}
         self._idle: List[PooledInstance] = []     # LIFO stack
@@ -129,6 +144,9 @@ class InstancePool:
         self.reaped = 0
         self.dead_evictions = 0       # instances evicted because the backend
                                       # substrate died (worker/fork gone)
+        self.demotions = 0            # graded keep-alive: one-rung drops
+        self.partial_cold_starts = 0  # cold acquires that landed on a
+                                      # partial-warm (PROCESS) instance
         self.prewarm_dispatches = 0
         self.prewarm_provisioned = 0
         # lifetime fr_state counters of reaped instances, folded in by
@@ -138,6 +156,10 @@ class InstancePool:
         # measured init seconds of reaped instances: [sum, count] — keeps
         # measured_cold_start() a lifetime mean across instance churn
         self._reaped_init = [0.0, 0]
+        # per-rung splits of the same fold: sandbox-boot (PROCESS) share
+        # and init_fn/plan (INITIALIZED) share
+        self._reaped_process = [0.0, 0]
+        self._reaped_init_step = [0.0, 0]
         # snapshot-backend fork source: one template per (function, pool),
         # shared by every instance the pool ever provisions.  Started
         # eagerly at pool construction (= register time) so the template
@@ -176,7 +198,8 @@ class InstancePool:
     def _create_locked(self) -> PooledInstance:
         inst = PooledInstance(self._next_id,
                               self._attach_backend_locked(self._factory()),
-                              created_at=self.clock(), last_used=self.clock())
+                              created_at=self.clock(), last_used=self.clock(),
+                              level_since=self.clock())
         self._next_id += 1
         self._instances[inst.instance_id] = inst
         self._idle.append(inst)
@@ -229,20 +252,41 @@ class InstancePool:
         with self._cond:
             return len(self._idle)
 
-    def warm_idle_count(self) -> int:
-        """Idle instances that are *initialized* — the ones an arrival can
-        land on without paying a cold start.  This is the warmth signal
-        the cluster's warmth-aware routing policy reads."""
+    def warm_idle_count(self,
+                        min_level: WarmthLevel = WarmthLevel.INITIALIZED
+                        ) -> int:
+        """Idle instances at or above ``min_level`` that an arrival can
+        *actually* land on warm — which excludes instances whose freshen/
+        partial-warm is still in flight, because ``acquire``'s warm path
+        skips those while another warm container is available.  This is
+        the warmth signal the cluster's warmth-aware routing policy
+        reads, so it must match acquire's preference, not overstate it."""
         with self._cond:
-            return sum(1 for i in self._idle if i.runtime.initialized)
+            return sum(1 for i in self._idle
+                       if i.runtime.warmth >= min_level
+                       and not i.runtime.freshen_in_flight())
 
-    def warm_total_count(self) -> int:
-        """Initialized instances whether idle or busy — the warmth a
-        drain must not discard: a busy instance is warmth an in-flight
-        invocation merely borrowed."""
+    def warm_total_count(self,
+                         min_level: WarmthLevel = WarmthLevel.INITIALIZED
+                         ) -> int:
+        """Instances at or above ``min_level`` whether idle, busy, or
+        mid-freshen — the warmth a drain must not discard: a busy
+        instance is warmth an in-flight invocation merely borrowed, and
+        an in-flight freshen is warmth already paid for."""
         with self._cond:
             return sum(1 for i in self._instances.values()
-                       if i.runtime.initialized)
+                       if i.runtime.warmth >= min_level)
+
+    def warmth_score(self) -> float:
+        """Level-weighted warmth of the idle, immediately-landable
+        instances: each contributes ``warmth / HOT`` (a HOT instance
+        counts 1.0, a PROCESS standby 1/3).  The graded analogue of
+        ``warm_idle_count`` for warmth-aware routing — a shard holding a
+        HOT instance outranks one holding only a PROCESS standby."""
+        with self._cond:
+            return sum(int(i.runtime.warmth) / int(WarmthLevel.HOT)
+                       for i in self._idle
+                       if not i.runtime.freshen_in_flight())
 
     def waiting_count(self) -> int:
         """Acquires currently blocked waiting for an instance (queue
@@ -255,11 +299,34 @@ class InstancePool:
             return len(self._instances) - len(self._idle)
 
     # -- lifecycle ------------------------------------------------------
+    def _keep_alive_for(self, level: WarmthLevel) -> float:
+        """The idle limit for one warmth rung (graded mode); per-level
+        overrides fall back to the binary ``keep_alive``."""
+        c = self.config
+        if level >= WarmthLevel.HOT:
+            v = c.keep_alive_hot
+        elif level == WarmthLevel.INITIALIZED:
+            v = c.keep_alive_initialized
+        else:
+            v = c.keep_alive_process
+        return c.keep_alive if v is None else v
+
     def reap(self, now: Optional[float] = None) -> int:
         """Evict idle instances past keep-alive; returns how many died.
         Repeated traffic gaps longer than ``keep_alive`` return the pool
-        all the way to zero (scale-to-zero)."""
+        all the way to zero (scale-to-zero).
+
+        With ``graded_warmth`` on, expiry is a *ladder walk* instead of a
+        cliff: an instance idle past its rung's limit drops exactly one
+        rung per sweep (HOT -> INITIALIZED -> PROCESS — never skipping
+        levels downward), and only an instance idle past the PROCESS
+        rung's limit is reaped outright.  Demotion releases the rung's
+        cost (caches, inited runtime) while keeping the cheaper remainder
+        resident, so a late arrival pays a partial — not full — cold
+        start."""
         now = self.clock() if now is None else now
+        if self.config.graded_warmth:
+            return self._reap_graded(now)
         dead: List[PooledInstance] = []
         with self._cond:
             keep: List[PooledInstance] = []
@@ -279,6 +346,62 @@ class InstancePool:
         self._fold_and_close(dead, join_timeout=0.0)
         return len(dead)
 
+    def _reap_graded(self, now: float) -> int:
+        dead: List[PooledInstance] = []
+        demote: List[PooledInstance] = []
+        with self._cond:
+            keep: List[PooledInstance] = []
+            for inst in self._idle:
+                if inst.runtime.freshen_in_flight():
+                    keep.append(inst)      # predicted traffic: hands off
+                    continue
+                level = inst.runtime.warmth
+                idle_for = now - max(inst.last_used, inst.level_since)
+                if idle_for <= self._keep_alive_for(level):
+                    keep.append(inst)
+                elif level > WarmthLevel.PROCESS:
+                    demote.append(inst)    # one rung down, stays resident
+                else:
+                    dead.append(inst)      # past the PROCESS floor: evict
+            # demote targets leave the idle list while their (possibly
+            # remote, pipe-round-trip) demotion runs unlocked, so no
+            # acquire can land on a rung mid-teardown
+            self._idle = keep
+            for inst in dead:
+                inst.state = InstanceState.REAPED
+                del self._instances[inst.instance_id]
+            self.reaped += len(dead)
+        self._fold_and_close(dead, join_timeout=0.0)
+        failed: List[PooledInstance] = []
+        for inst in demote:
+            target = WarmthLevel(int(inst.runtime.warmth) - 1)
+            try:
+                inst.runtime.demote_to(target)
+            except Exception:
+                failed.append(inst)        # substrate died mid-demote
+                continue
+            with self._cond:
+                if self._retired:
+                    failed.append(inst)    # pool retired mid-demote
+                    continue
+                if inst.instance_id in self._instances:
+                    inst.level_since = now
+                    # re-enter at the *cold* end of the LIFO stack: a
+                    # freshly demoted instance should be the last reused
+                    self._idle.insert(0, inst)
+                    self.demotions += 1
+                    self._cond.notify()
+        if failed:
+            with self._cond:
+                for inst in failed:
+                    if inst.instance_id in self._instances:
+                        inst.state = InstanceState.REAPED
+                        del self._instances[inst.instance_id]
+                        self.dead_evictions += 1
+                        self._cond.notify()
+            self._fold_and_close(failed, join_timeout=0.0)
+        return len(dead) + len(failed)
+
     def _fold_and_close(self, dead: List[PooledInstance],
                         join_timeout: Optional[float] = 0.0):
         """Fold dying instances' lifetime counters into the pool and close
@@ -287,14 +410,21 @@ class InstancePool:
         pipe round-trip and must never stall acquires."""
         folded: List[dict] = []
         init_s, init_n = 0.0, 0
+        proc_s, proc_n = 0.0, 0
+        step_s, step_n = 0.0, 0
         for inst in dead:
             inst.runtime.join_freshen(timeout=join_timeout)
             stats = inst.runtime.freshen_stats()
             if stats:
                 folded.append(stats)
+            if inst.runtime.warmth >= WarmthLevel.PROCESS:
+                proc_s += inst.runtime.process_seconds
+                proc_n += 1
             if inst.runtime.initialized:
                 init_s += inst.runtime.init_seconds
                 init_n += 1
+                step_s += inst.runtime.init_step_seconds
+                step_n += 1
             inst.runtime.close()
         if not dead:
             return
@@ -304,6 +434,10 @@ class InstancePool:
                     self._reaped_freshen_stats[k] += stats.get(k, 0)
             self._reaped_init[0] += init_s
             self._reaped_init[1] += init_n
+            self._reaped_process[0] += proc_s
+            self._reaped_process[1] += proc_n
+            self._reaped_init_step[0] += step_s
+            self._reaped_init_step[1] += step_n
 
     def close(self):
         """Shut the pool down: evict every idle instance regardless of
@@ -334,20 +468,24 @@ class InstancePool:
         self.close()
 
     def _pop_warmest_locked(self) -> PooledInstance:
-        """Warmth-aware LIFO: prefer the most recently used *initialized*
-        instance whose freshen is not mid-flight, so an arrival neither
-        lands on a still-booting provisioned instance nor blocks in FrWait
-        behind an in-progress prewarm while another warm container sits
-        idle.  (With a single idle instance there is no choice — waiting on
-        its in-flight freshen costs no more than doing the work inline.)"""
+        """Warmth-aware LIFO: prefer the *highest-rung* servable instance
+        whose freshen is not mid-flight (HOT over merely INITIALIZED),
+        most recently used among equals, so an arrival neither lands on a
+        still-booting provisioned instance nor blocks in FrWait behind an
+        in-progress prewarm while another warm container sits idle.
+        Below the servable tier the ladder still ranks: a PROCESS standby
+        beats a COLD slot — the arrival pays only the init share.  (With
+        a single idle instance there is no choice — waiting on its
+        in-flight freshen costs no more than doing the work inline.)"""
+        best_i, best_key = None, None
         for i in range(len(self._idle) - 1, -1, -1):
             rt = self._idle[i].runtime
-            if rt.initialized and not rt.freshen_in_flight():
-                return self._idle.pop(i)
-        for i in range(len(self._idle) - 1, -1, -1):
-            if self._idle[i].runtime.initialized:
-                return self._idle.pop(i)
-        return self._idle.pop()
+            in_flight = rt.freshen_in_flight()
+            key = (rt.warmth >= WarmthLevel.INITIALIZED and not in_flight,
+                   int(rt.warmth), not in_flight, i)
+            if best_key is None or key > best_key:
+                best_i, best_key = i, key
+        return self._idle.pop(best_i)
 
     def _scale_up_allowed_locked(self) -> bool:
         """``_waiting`` includes the requester, so with the default depth of
@@ -382,8 +520,10 @@ class InstancePool:
                     while True:
                         if self._idle:
                             inst = self._pop_warmest_locked()
-                            if (inst.runtime.initialized
-                                    and not inst.runtime.healthy()):
+                            if not inst.runtime.healthy():
+                                # any provisioned rung can die under us —
+                                # a PROCESS standby corpse is as unusable
+                                # as a dead HOT worker
                                 inst.state = InstanceState.REAPED
                                 del self._instances[inst.instance_id]
                                 self.dead_evictions += 1
@@ -410,6 +550,10 @@ class InstancePool:
                 cold = not inst.runtime.initialized
                 if cold:
                     self.cold_starts += 1
+                    if inst.runtime.warmth > WarmthLevel.COLD:
+                        # landing on a PROCESS standby: the sandbox share
+                        # is already paid, only the init share remains
+                        self.partial_cold_starts += 1
                 else:
                     self.warm_acquires += 1
                 if waited:
@@ -441,7 +585,7 @@ class InstancePool:
         # liveness probe outside the lock (it may touch the backend); a
         # dead substrate is evicted instead of re-idled, so no later
         # acquire lands on a corpse and waits out keep-alive
-        dead = inst.runtime.initialized and not inst.runtime.healthy()
+        dead = not inst.runtime.healthy()
         with self._cond:
             if inst.state is InstanceState.REAPED:
                 return
@@ -481,39 +625,52 @@ class InstancePool:
 
     # -- prewarm-aware freshen dispatch --------------------------------
     def prewarm_freshen(self, max_dispatch: Optional[int] = None,
-                        provision: Optional[bool] = None
+                        provision: Optional[bool] = None,
+                        level: Optional[WarmthLevel] = None
                         ) -> List[threading.Thread]:
-        """Dispatch the freshen hook to idle pooled instances.
+        """Dispatch warmth provisioning to idle pooled instances.
 
         This is the platform half of §3.1 under multi-instance pooling:
-        the scheduler predicted this function will run soon, so freshen
-        the containers an arrival is most likely to land on (top of the
-        LIFO idle stack).  When nothing is idle: with ``provision`` on,
-        cold-start a brand-new instance *off the critical path* and
-        freshen it — SPES-style proactive provisioning; otherwise (by
-        default) fall back to freshening a busy instance's runtime, the
-        seed single-instance behavior — fr_state is thread-safe, so the
-        in-flight invocation is unaffected and the next one on that
+        the scheduler predicted this function will run soon, so warm the
+        containers an arrival is most likely to land on (top of the LIFO
+        idle stack).  ``level`` picks the target rung (default HOT — the
+        full freshen hook); a lower level buys a cheap standby instead:
+        high-confidence predictions justify HOT prewarm, long-tail
+        functions only a PROCESS-rung sandbox.  When nothing is idle
+        (below the target rung): with ``provision`` on, provision a
+        brand-new instance *off the critical path* and warm it to the
+        target — SPES-style proactive provisioning; otherwise (HOT only,
+        by default) fall back to freshening a busy instance's runtime,
+        the seed single-instance behavior — fr_state is thread-safe, so
+        the in-flight invocation is unaffected and the next one on that
         instance hits.
 
-        Freshen is started while holding the pool lock, so ``reap`` (which
-        skips instances with an in-flight freshen) can never evict a
-        target between selection and dispatch."""
+        Warm-up is started while holding the pool lock, so ``reap`` (which
+        skips instances with an in-flight freshen/partial warm) can never
+        evict a target between selection and dispatch."""
         max_dispatch = (self.config.prewarm_fanout if max_dispatch is None
                         else max_dispatch)
         provision = (self.config.prewarm_provision if provision is None
                      else provision)
+        level = WarmthLevel.HOT if level is None else WarmthLevel(level)
         self.reap()
         threads: List[threading.Thread] = []
         with self._cond:
-            targets = list(reversed(self._idle))[:max_dispatch]
+            if level >= WarmthLevel.HOT:
+                targets = list(reversed(self._idle))[:max_dispatch]
+            else:
+                # partial warm: only instances still below the target rung
+                # benefit; never demote a warmer instance to "prewarm" it
+                targets = [i for i in reversed(self._idle)
+                           if i.runtime.warmth < level][:max_dispatch]
             if not targets and provision and \
                     len(self._instances) < self.config.max_instances:
                 inst = self._create_locked()   # stays IDLE and acquirable
                 self.prewarm_provisioned += 1
                 self._cond.notify()
                 targets = [inst]
-            if not targets and self.config.prewarm_busy_fallback:
+            if not targets and level >= WarmthLevel.HOT \
+                    and self.config.prewarm_busy_fallback:
                 busy = [i for i in self._instances.values()
                         if i.state is InstanceState.BUSY]
                 busy.sort(key=lambda i: i.last_used, reverse=True)
@@ -525,7 +682,8 @@ class InstancePool:
                 # evict an instance we just paid to warm before the
                 # predicted arrival lands
                 inst.last_used = now
-                th = inst.runtime.freshen(blocking=False)
+                inst.level_since = now
+                th = inst.runtime.warm_async(level)
                 if th is not None:
                     threads.append(th)
         return threads
@@ -567,10 +725,32 @@ class InstancePool:
             total, n = self._measured_init_locked()
         return total / n if n else self.config.cold_start_cost
 
+    def _measured_levels_locked(self) -> Dict[str, float]:
+        """Mean measured cost of each provisioning rung (lifetime: live +
+        reaped fold).  ``process`` is the sandbox-boot share, ``init`` the
+        init_fn/plan share — together the full cold start a partial-warm
+        standby lets an arrival skip part of."""
+        proc_s, proc_n = self._reaped_process
+        step_s, step_n = self._reaped_init_step
+        for inst in self._instances.values():
+            if inst.runtime.warmth >= WarmthLevel.PROCESS:
+                proc_s += inst.runtime.process_seconds
+                proc_n += 1
+            if inst.runtime.initialized:
+                step_s += inst.runtime.init_step_seconds
+                step_n += 1
+        return {
+            "measured_process_mean": proc_s / proc_n if proc_n else 0.0,
+            "measured_init_step_mean": step_s / step_n if step_n else 0.0,
+        }
+
     def stats(self) -> dict:
         with self._cond:
             total, n = self._measured_init_locked()
-            return {
+            levels = {lvl.label: 0 for lvl in WarmthLevel}
+            for inst in self._instances.values():
+                levels[inst.runtime.warmth.label] += 1
+            out = {
                 "instances": len(self._instances),
                 "idle": len(self._idle),
                 "waiting": self._waiting,
@@ -579,11 +759,17 @@ class InstancePool:
                 "queued_acquires": self.queued_acquires,
                 "reaped": self.reaped,
                 "dead_evictions": self.dead_evictions,
+                "demotions": self.demotions,
+                "partial_cold_starts": self.partial_cold_starts,
                 "prewarm_dispatches": self.prewarm_dispatches,
                 "prewarm_provisioned": self.prewarm_provisioned,
                 "backend": self.config.backend,
+                # live instances per warmth rung, busy or idle
+                "levels": levels,
                 # same fallback as measured_cold_start(): before anything
                 # has booted, both report the configured cold_start_cost
                 "measured_init_mean": (total / n if n
                                        else self.config.cold_start_cost),
             }
+            out.update(self._measured_levels_locked())
+            return out

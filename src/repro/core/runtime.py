@@ -10,11 +10,25 @@ Runtime-scoped state (``Runtime.scope``) survives across invocations within
 the container, exactly like runtime-scoped variables in the paper; the
 ``FreshenState`` and ``FreshenCache`` live there.
 
+Warmth is a *ladder*, not a bool (SPES, arXiv 2403.17574): the freshen
+plan is already a list of steps, and the provisioning cost decomposes the
+same way —
+
+    COLD -> PROCESS       (sandbox/interpreter up, function un-inited)
+         -> INITIALIZED   (init_fn ran, plan built; servable)
+         -> HOT           (fr_fetch/fr_warm caches populated)
+
+``Runtime.warmth`` tracks the current rung; ``warm_to(level)`` promotes
+through the rungs paying only the remaining cost, and ``demote_to(level)``
+releases the upper rungs (cache invalidation, runtime teardown) while
+keeping the cheaper ones resident.  ``initialized`` survives as a compat
+property meaning ``warmth >= INITIALIZED``.
+
 A Runtime is one *instance*; multi-instance pooling (warm-container
 keep-alive, scale-to-zero, prewarm dispatch) lives in
 ``repro.core.pool.InstancePool``.  Because pooled instances are touched
 concurrently (an invocation on the run hook while a prewarm freshen runs
-in its own thread), ``init`` is idempotent and guarded by a lock, and the
+in its own thread), promotion is idempotent and guarded by a lock, and the
 non-blocking freshen hook performs initialization inside its background
 thread so a prewarm-provisioned cold start never blocks the dispatcher.
 
@@ -28,6 +42,7 @@ threads, counters — identical across backends.
 """
 from __future__ import annotations
 
+import enum
 import threading
 import time
 from dataclasses import dataclass, field
@@ -35,6 +50,20 @@ from typing import Any, Callable, Dict, Optional
 
 from repro.core.cache import FreshenCache
 from repro.core.freshen import FreshenPlan, FreshenState
+
+
+class WarmthLevel(enum.IntEnum):
+    """The warmth ladder.  Ordered: comparisons and ``max`` work, and a
+    level's int value doubles as its rung index (COLD=0 … HOT=3)."""
+
+    COLD = 0          # nothing provisioned
+    PROCESS = 1       # sandbox/interpreter booted, function un-inited
+    INITIALIZED = 2   # init_fn ran, freshen plan built — servable
+    HOT = 3           # fr_fetch/fr_warm caches populated
+
+    @property
+    def label(self) -> str:
+        return self.name.lower()
 
 
 @dataclass
@@ -77,13 +106,17 @@ class Runtime:
     def __init__(self, spec: FunctionSpec,
                  cold_start_cost: float = 0.0,
                  clock: Callable[[], float] = time.monotonic,
-                 backend: Optional["InstanceBackend"] = None):
+                 backend: Optional["InstanceBackend"] = None,
+                 process_boot_fraction: float = 0.8):
         self.spec = spec
         self.clock = clock
         self.scope: Dict[str, Any] = {}            # runtime-scoped variables
         self.cache = FreshenCache()
-        self.initialized = False
+        self.warmth = WarmthLevel.COLD
         self.cold_start_cost = cold_start_cost
+        # thread backend only: what share of the simulated cold start is
+        # sandbox boot (PROCESS) vs init_fn/plan (INITIALIZED)
+        self.process_boot_fraction = process_boot_fraction
         self.fr_state: Optional[FreshenState] = None
         if backend is None:
             from repro.core.backend import ThreadBackend
@@ -92,25 +125,108 @@ class Runtime:
         self._freshen_threads: list[threading.Thread] = []
         self._threads_lock = threading.Lock()
         self._init_lock = threading.Lock()
-        self.init_seconds = 0.0
+        self.init_seconds = 0.0           # full COLD->INITIALIZED cost
+        self.process_seconds = 0.0        # COLD->PROCESS share
+        self.init_step_seconds = 0.0      # PROCESS->INITIALIZED share
         self.run_count = 0
         self.freshen_count = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def initialized(self) -> bool:
+        """Compat view of the warmth ladder: servable (init_fn ran)."""
+        return self.warmth >= WarmthLevel.INITIALIZED
+
+    @initialized.setter
+    def initialized(self, value: bool) -> None:
+        if value:
+            if self.warmth < WarmthLevel.INITIALIZED:
+                self.warmth = WarmthLevel.INITIALIZED
+        else:
+            self.warmth = WarmthLevel.COLD
 
     # ------------------------------------------------------------------
     def init(self):
         """The init hook: start runtime, load code, build the freshen plan.
         Idempotent and thread-safe — a pooled instance may be initialized
-        by whichever of run/freshen reaches it first.  The work is the
-        backend's (thread: simulated cold start in-process; subprocess:
-        spawn the worker interpreter); ``init_seconds`` is measured here
-        around whatever the backend actually did."""
+        by whichever of run/freshen reaches it first.  Equivalent to
+        ``warm_to(INITIALIZED)``: an instance already at PROCESS pays only
+        the remaining init_fn/plan share."""
         with self._init_lock:
-            if self.initialized:
+            self._promote_locked(WarmthLevel.INITIALIZED)
+
+    def warm_to(self, level: WarmthLevel) -> None:
+        """Promote this instance to *at least* ``level``, paying only the
+        cost of the rungs still missing.  PROCESS/INITIALIZED promotion
+        runs under the init lock; HOT promotion (cache population) runs
+        through the blocking freshen hook outside it, so invocations and
+        concurrent promotions serialize on the same locks they always
+        did."""
+        level = WarmthLevel(level)
+        with self._init_lock:
+            self._promote_locked(min(level, WarmthLevel.INITIALIZED))
+        if level >= WarmthLevel.HOT and self.warmth < WarmthLevel.HOT:
+            self.freshen(blocking=True)
+
+    def warm_async(self, level: WarmthLevel) -> Optional[threading.Thread]:
+        """Non-blocking ``warm_to``: promotion runs in a background thread
+        registered alongside freshen threads, so ``freshen_in_flight()``
+        covers in-progress partial warms and the pool's reap/demote sweeps
+        leave them alone."""
+        level = WarmthLevel(level)
+        if level >= WarmthLevel.HOT:
+            return self.freshen(blocking=False)
+        th = threading.Thread(target=lambda: self.warm_to(level),
+                              name=f"warm-{self.spec.name}-{level.label}",
+                              daemon=True)
+        th.start()
+        with self._threads_lock:
+            self._freshen_threads.append(th)
+        return th
+
+    def demote_to(self, level: WarmthLevel) -> None:
+        """Release the warmth rungs above ``level`` (keep-alive expiry
+        demotes one rung at a time instead of reaping outright).  The
+        backend drops what the rung held — HOT->INITIALIZED invalidates
+        the fr caches, ->PROCESS tears down the inited runtime but keeps
+        the sandbox resident.  No-op unless strictly downward."""
+        level = WarmthLevel(level)
+        with self._init_lock:
+            if level >= self.warmth:
                 return
-            t0 = self.clock()
-            self.backend.boot(self)
-            self.initialized = True
-            self.init_seconds = self.clock() - t0
+            self.backend.demote(self, level)
+            self.warmth = level
+
+    def _promote_locked(self, target: WarmthLevel) -> None:
+        if self.warmth >= target:
+            return
+        try:
+            if self.warmth < WarmthLevel.PROCESS:
+                t0 = self.clock()
+                self.backend.boot_process(self)
+                self.process_seconds = self.clock() - t0
+                self.warmth = WarmthLevel.PROCESS
+            if target >= WarmthLevel.INITIALIZED \
+                    and self.warmth < WarmthLevel.INITIALIZED:
+                t0 = self.clock()
+                self.backend.boot_init(self)
+                self.init_step_seconds = self.clock() - t0
+                self.warmth = WarmthLevel.INITIALIZED
+                self.init_seconds = (self.process_seconds
+                                     + self.init_step_seconds)
+        except BaseException:
+            # a partial rung whose substrate died is not resumable: reset
+            # to COLD so the retry pays a clean full boot (thread-backend
+            # failures keep the PROCESS rung — the sleep was already paid)
+            if self.warmth > WarmthLevel.COLD \
+                    and not self.backend.alive(self):
+                self.warmth = WarmthLevel.COLD
+            raise
+
+    def _set_warmth_at_least(self, level: WarmthLevel) -> None:
+        with self._init_lock:
+            if self.warmth < level:
+                self.warmth = level
 
     def _ensure_init(self):
         if not self.initialized:
@@ -121,12 +237,14 @@ class Runtime:
         """The freshen hook (§3.1): run Algorithm 2 in a separate thread.
         Receives no function arguments (abuse rule, §3.3).  In the
         non-blocking case any pending cold start happens inside the
-        background thread, keeping prewarm dispatch off the critical path."""
+        background thread, keeping prewarm dispatch off the critical path.
+        A completed freshen leaves the fr caches populated — the HOT rung."""
         self.freshen_count += 1
 
         def _run():
             self._ensure_init()
             self.backend.freshen(self)
+            self._set_warmth_at_least(WarmthLevel.HOT)
 
         if blocking:
             _run()
@@ -139,10 +257,14 @@ class Runtime:
         return th
 
     def run(self, args: Any = None) -> Any:
-        """The run hook: execute the function (timing unmodified)."""
+        """The run hook: execute the function (timing unmodified).  The
+        function body's inline fr_fetch/fr_warm calls populate the caches,
+        so a completed run leaves the instance HOT."""
         self._ensure_init()
         self.run_count += 1
-        return self.backend.run(self, args)
+        result = self.backend.run(self, args)
+        self._set_warmth_at_least(WarmthLevel.HOT)
+        return result
 
     def freshen_stats(self) -> Optional[dict]:
         """This instance's fr_state counters (freshened/inline/waits/hits),
@@ -164,7 +286,7 @@ class Runtime:
         self.backend.close()
 
     def freshen_in_flight(self) -> bool:
-        """True while a non-blocking freshen hook is still running."""
+        """True while a non-blocking freshen/partial-warm is still running."""
         with self._threads_lock:
             self._freshen_threads = [t for t in self._freshen_threads
                                      if t.is_alive()]

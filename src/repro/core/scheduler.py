@@ -35,7 +35,7 @@ from repro.core.accounting import Accountant
 from repro.core.backend import make_backend
 from repro.core.pool import InstancePool, PoolConfig
 from repro.core.prediction import HybridPredictor, Prediction
-from repro.core.runtime import FunctionSpec, Runtime
+from repro.core.runtime import FunctionSpec, Runtime, WarmthLevel
 
 
 @dataclass
@@ -45,6 +45,30 @@ class FreshenEvent:
     dispatched: bool
     reason: str
     at: float = field(default_factory=time.monotonic)
+
+
+@dataclass
+class WarmthPolicy:
+    """Maps prediction confidence to a target warmth rung (SPES-style):
+    how warm an instance is worth making is a function of how sure the
+    predictor is.  High-regularity functions earn a full HOT prewarm
+    (caches populated), medium confidence an INITIALIZED instance
+    (servable, caches cold), and the long tail a cheap PROCESS-rung
+    sandbox standby.  ``standby_on_gate``: even when the Accountant's
+    confidence/accuracy gate refuses a *freshen*, a graded pool may still
+    buy the near-free PROCESS standby — the gate protects freshen
+    accounting and cache work, not sandbox residency."""
+
+    hot_confidence: float = 0.7
+    init_confidence: float = 0.35
+    standby_on_gate: bool = True
+
+    def target_level(self, probability: float) -> WarmthLevel:
+        if probability >= self.hot_confidence:
+            return WarmthLevel.HOT
+        if probability >= self.init_confidence:
+            return WarmthLevel.INITIALIZED
+        return WarmthLevel.PROCESS
 
 
 class _PrimaryRuntimeView:
@@ -83,10 +107,14 @@ class FreshenScheduler:
                  accountant: Optional[Accountant] = None,
                  pool_config: Optional[PoolConfig] = None,
                  max_router_threads: int = 16,
-                 event_window: int = 4096):
+                 event_window: int = 4096,
+                 warmth_policy: Optional["WarmthPolicy"] = None):
         self.predictor = predictor or HybridPredictor()
         self.accountant = accountant or Accountant()
         self.pool_config = pool_config or PoolConfig()
+        # None = binary warmth (every prewarm targets HOT — seed behavior);
+        # a WarmthPolicy makes prewarm depth confidence-driven
+        self.warmth_policy = warmth_policy
         self.max_router_threads = max_router_threads
         # Cross-shard freshen propagation hook (repro.cluster): when set,
         # every prediction is offered to the callback first.  Returning
@@ -180,12 +208,14 @@ class FreshenScheduler:
         it, so a trace replays into a scheduler or a cluster unchanged)."""
         return fn in self.pools
 
-    def prewarm(self, fn: str, provision: bool = True
+    def prewarm(self, fn: str, provision: bool = True,
+                level: Optional[WarmthLevel] = None
                 ) -> List[threading.Thread]:
         """Externally-driven prewarm (oracle replay, cluster rebalancing):
-        freshen ``fn``'s pool, provisioning off the critical path when
-        nothing is idle."""
-        return self.pools[fn].prewarm_freshen(provision=provision)
+        warm ``fn``'s pool to ``level`` (default HOT — the full freshen
+        hook), provisioning off the critical path when nothing is idle."""
+        return self.pools[fn].prewarm_freshen(provision=provision,
+                                              level=level)
 
     # ------------------------------------------------------------------
     def _dispatch_freshen(self, pred: Prediction,
@@ -207,27 +237,45 @@ class FreshenScheduler:
                                             "no-runtime"))
             return False
         app = pool.spec.app
+        level = (WarmthLevel.HOT if self.warmth_policy is None
+                 else self.warmth_policy.target_level(pred.probability))
         if not self.accountant.should_freshen(app, pred.probability):
+            if (self.warmth_policy is not None
+                    and self.warmth_policy.standby_on_gate
+                    and pool.config.graded_warmth):
+                # the gate refused the freshen, not sandbox residency:
+                # a PROCESS-rung standby is the long-tail consolation
+                threads = pool.prewarm_freshen(level=WarmthLevel.PROCESS)
+                if threads:
+                    self.events.append(FreshenEvent(
+                        pred.fn, pred.probability, True, "standby-process"))
+                    return True
             self.events.append(FreshenEvent(pred.fn, pred.probability, False,
                                             "policy-gated"))
             return False
         t0 = time.monotonic()
-        threads = pool.prewarm_freshen()
+        threads = pool.prewarm_freshen(level=level)
         if not threads:
             self.events.append(FreshenEvent(pred.fn, pred.probability, False,
                                             "no-idle-instance"))
             return False
-        self.events.append(FreshenEvent(pred.fn, pred.probability, True,
-                                        "dispatched"))
+        self.events.append(FreshenEvent(
+            pred.fn, pred.probability, True,
+            "dispatched" if level >= WarmthLevel.HOT
+            else f"dispatched-{level.label}"))
 
-        def _account():
-            for th in threads:
-                th.join()
-            self.accountant.record_freshen(
-                app, pred.fn, time.monotonic() - t0,
-                expected_delay=pred.expected_delay)
+        if level >= WarmthLevel.HOT:
+            # freshen accounting tracks cache-population work; partial
+            # warms never touch the caches and must not skew the paper's
+            # accuracy gate
+            def _account():
+                for th in threads:
+                    th.join()
+                self.accountant.record_freshen(
+                    app, pred.fn, time.monotonic() - t0,
+                    expected_delay=pred.expected_delay)
 
-        threading.Thread(target=_account, daemon=True).start()
+            threading.Thread(target=_account, daemon=True).start()
         return True
 
     def on_invocation_start(self, fn: str):

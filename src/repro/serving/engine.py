@@ -303,7 +303,8 @@ class ServingEngine:
     def deploy(self, ep: ModelEndpoint, pool_config=None,
                shards: Optional[int] = None,
                backend: Optional[str] = None,
-               elastic: bool = False) -> Runtime:
+               elastic: bool = False,
+               graded_warmth: Optional[bool] = None) -> Runtime:
         """Register an endpoint; with ``shards=N`` (N>1) it joins the
         sharded fabric: one ``InstancePool`` per shard behind the
         ``ClusterRouter`` (lazily built at the first sharded deploy),
@@ -328,13 +329,24 @@ class ServingEngine:
         serves it too.  With ``shards`` omitted an elastic deploy joins
         the fabric at its current size (building a 1-shard fabric when
         none exists yet) rather than silently staying on the base
-        scheduler."""
+        scheduler.
+
+        ``graded_warmth=True`` turns on the SPES-style warmth ladder for
+        the endpoint's pools: keep-alive expiry demotes instances one
+        warmth rung at a time (HOT -> INITIALIZED -> PROCESS) instead of
+        reaping outright, and prewarm depth follows prediction
+        confidence.  ``None`` (default) keeps the pool config's own
+        setting."""
         self.endpoints[ep.name] = ep
         if pool_config is None:
             pool_config = self._default_pool_config()
         if backend is not None:
             import dataclasses
             pool_config = dataclasses.replace(pool_config, backend=backend)
+        if graded_warmth is not None:
+            import dataclasses
+            pool_config = dataclasses.replace(pool_config,
+                                              graded_warmth=graded_warmth)
         if elastic or (shards is not None and shards > 1):
             cluster = self._ensure_cluster(max(shards or 1, 1),
                                            elastic=elastic)

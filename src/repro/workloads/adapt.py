@@ -88,6 +88,8 @@ class AdaptDaemon:
         self.passes = 0
         self.adaptations = 0
         self.reaped_swept = 0                  # instances reaped by the sweep
+        self.demoted_swept = 0                 # warmth rungs dropped by it
+                                               # (graded pools only)
         self.scale_outs = 0
         self.scale_ins = 0
         self.errors = 0                        # step() failures in the loop
@@ -132,10 +134,15 @@ class AdaptDaemon:
         # own reap() only runs inside acquire/prewarm_freshen, so a
         # function that goes quiet would otherwise park its (subprocess/
         # snapshot worker) instances forever — scale-to-zero needs a
-        # traffic-independent clock tick, and the daemon pass is it
+        # traffic-independent clock tick, and the daemon pass is it.
+        # On graded pools the same tick drives the demotion ladder: each
+        # pass drops expired instances one warmth rung (tracked via the
+        # pool's demotion counter delta).
         for sched in schedulers:
             for pool in list(sched.pools.values()):
+                before = pool.demotions
                 self.reaped_swept += pool.reap()
+                self.demoted_swept += pool.demotions - before
         if self.adapt_pools:
             for idx, sched in enumerate(schedulers):
                 summaries: Dict[str, dict] = {}

@@ -156,8 +156,36 @@ class HistoryPolicy:
             concurrency = wall_rate * h.duration
             max_instances = max(1, math.ceil(concurrency))
         max_instances = min(max_instances, self.max_instances_cap)
-        return replace(base, keep_alive=keep_alive,
-                       max_instances=max_instances)
+        out = replace(base, keep_alive=keep_alive,
+                      max_instances=max_instances)
+        if base.graded_warmth and h and h.interarrivals:
+            out = self._graded_keep_alives(out, h, time_scale,
+                                           measured_cold_start)
+        return out
+
+    def _graded_keep_alives(self, config: PoolConfig, h: _FnHistory,
+                            time_scale: float,
+                            measured_cold_start: Optional[float]
+                            ) -> PoolConfig:
+        """Per-rung keep-alives from the idle-gap distribution: the HOT
+        rung (most expensive to hold, cheapest to rebuild from
+        INITIALIZED) covers only the typical gap (p50), the INITIALIZED
+        rung the configured percentile (the binary keep-alive), and the
+        near-free PROCESS rung the tail (p99) — so a long-tail recurrence
+        lands on a standby instead of a full cold start.  Monotone by
+        construction (hot <= initialized <= process) and the PROCESS rung
+        is floored at the boot cost like the binary keep-alive."""
+        gaps = h.interarrivals
+        margin = self.keep_alive_margin * time_scale
+        ka_init = config.keep_alive
+        ka_hot = min(percentile(gaps, 50.0) * margin, ka_init)
+        ka_proc = percentile(gaps, 99.0) * margin
+        ka_proc = min(max(ka_proc, ka_init), self.keep_alive_cap)
+        ka_proc = max(ka_proc, config.cold_start_cost,
+                      measured_cold_start or 0.0)
+        return replace(config, keep_alive_hot=ka_hot,
+                       keep_alive_initialized=ka_init,
+                       keep_alive_process=ka_proc)
 
     def prime(self, predictor: HybridPredictor,
               time_scale: float = 1.0) -> RecurrencePredictor:
@@ -197,5 +225,24 @@ class HistoryPolicy:
                          boot_cost)
         max_instances = max(1, min(config.max_instances + 1,
                                    self.max_instances_cap))
-        return replace(config, keep_alive=keep_alive,
-                       max_instances=max_instances)
+        out = replace(config, keep_alive=keep_alive,
+                      max_instances=max_instances)
+        if config.graded_warmth:
+            # widen every rung with the same pressure, keeping the ladder
+            # monotone: cold starts above target mean demotion/reap came
+            # too early at every level
+            def _scale(v):
+                return (None if v is None
+                        else max(min(v * 2.0, self.keep_alive_cap),
+                                 boot_cost))
+            ka_hot = _scale(config.keep_alive_hot)
+            ka_init = _scale(config.keep_alive_initialized)
+            ka_proc = _scale(config.keep_alive_process)
+            if ka_init is not None and ka_hot is not None:
+                ka_hot = min(ka_hot, ka_init)
+            if ka_proc is not None:
+                ka_proc = max(ka_proc, keep_alive)
+            out = replace(out, keep_alive_hot=ka_hot,
+                          keep_alive_initialized=ka_init,
+                          keep_alive_process=ka_proc)
+        return out

@@ -5,5 +5,36 @@ import os
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import jax  # noqa: E402
+import pytest  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+
+class FakeClock:
+    """Deterministic test clock for keep-alive / reap / demotion timing.
+
+    Callable, so it drops straight into ``InstancePool(..., clock=clock)``
+    (or a live ``pool.clock = clock``); tests then move time explicitly
+    with ``advance``/``set`` instead of sleeping.  Pure state, no
+    threading — hypothesis-driven tests construct it directly
+    (``from conftest import FakeClock``) since ``@given`` cannot take
+    function-scoped fixtures."""
+
+    def __init__(self, start: float = 0.0):
+        self.now = start
+
+    def __call__(self) -> float:
+        return self.now
+
+    def advance(self, seconds: float) -> float:
+        self.now += seconds
+        return self.now
+
+    def set(self, t: float) -> float:
+        self.now = t
+        return self.now
+
+
+@pytest.fixture
+def fake_clock() -> FakeClock:
+    return FakeClock()

@@ -15,7 +15,7 @@ from concurrent.futures import wait
 import pytest
 
 from repro.core import (BackendError, FreshenScheduler, FunctionSpec,
-                        PoolConfig, make_backend)
+                        PoolConfig, WarmthLevel, make_backend)
 from repro.core.backend import (SnapshotBackend, SubprocessBackend,
                                 ThreadBackend)
 from repro.core.backend_template import SnapshotTemplate
@@ -410,5 +410,102 @@ def test_inherited_pythonpath_reaches_worker(tmp_path, monkeypatch, backend):
     try:
         rt.init()
         assert rt.run(None) == "from-pythonpath"
+    finally:
+        rt.close()
+
+
+# ======================================================================
+# partial-warm (graded ladder) substrates: kill at each rung
+# ======================================================================
+@pytest.mark.parametrize("level", [WarmthLevel.PROCESS,
+                                   WarmthLevel.INITIALIZED])
+@pytest.mark.parametrize("backend", ["subprocess", "snapshot"])
+def test_partial_warm_instance_killed_is_evicted(backend, level):
+    """Kill a standby parked at the PROCESS or INITIALIZED rung: the
+    corpse must be detected (a PROCESS-rung corpse too — pre-PR-7
+    ``alive`` only probed initialized instances), evicted, and the next
+    invocation served on a freshly provisioned instance.  Under the
+    snapshot backend the template keeps serving forks throughout."""
+    sched = FreshenScheduler(pool_config=PoolConfig(
+        max_instances=2, keep_alive=300.0, backend=backend,
+        graded_warmth=True))
+    try:
+        sched.register(_spec("bk_partial"))
+        pool = sched.pool("bk_partial")
+        for th in pool.prewarm_freshen(max_dispatch=1, provision=True,
+                                       level=level):
+            th.join(30.0)
+        (inst,) = pool._instances.values()
+        assert inst.runtime.warmth is level
+        assert inst.runtime.healthy()
+        be = inst.runtime.backend
+        pid = be._proc.pid if backend == "subprocess" else be.child_pid
+        os.kill(pid, signal.SIGKILL)
+        deadline = time.monotonic() + 10
+        while inst.runtime.healthy() and time.monotonic() < deadline:
+            time.sleep(0.01)                  # death surfaces via poll/EOF
+        assert not inst.runtime.healthy()
+        assert sched.invoke("bk_partial", 2,
+                            freshen_successors=False) == ("ok", 2, 123)
+        assert pool.stats()["dead_evictions"] == 1
+        assert pool.size() == 1               # corpse gone, replacement live
+        if backend == "snapshot":
+            assert pool.template.alive        # template outlives its forks
+    finally:
+        sched.shutdown()
+
+
+@pytest.mark.parametrize("backend", ["subprocess", "snapshot"])
+def test_measured_boot_splits_into_process_and_init_shares(backend):
+    """The measured cold start decomposes: boot_process (spawn / fork)
+    and boot_init (remote init_fn + plan) are timed separately and both
+    shares surface in pool stats for the retention policy to trade on."""
+    sched = FreshenScheduler(pool_config=PoolConfig(
+        max_instances=1, keep_alive=300.0, backend=backend))
+    try:
+        sched.register(_spec("bk_split"))
+        assert sched.invoke("bk_split", 1,
+                            freshen_successors=False) == ("ok", 1, 123)
+        (inst,) = sched.pool("bk_split")._instances.values()
+        rt = inst.runtime
+        assert rt.process_seconds > 0         # spawn/fork share, measured
+        assert rt.init_step_seconds > 0       # remote init share, measured
+        assert rt.init_seconds == pytest.approx(
+            rt.process_seconds + rt.init_step_seconds)
+        s = sched.pool("bk_split").stats()
+        assert s["measured_process_mean"] > 0
+        assert s["measured_init_step_mean"] > 0
+        assert s["measured_init_mean"] == pytest.approx(
+            s["measured_process_mean"] + s["measured_init_step_mean"])
+    finally:
+        sched.shutdown()
+
+
+@pytest.mark.parametrize("backend", ["subprocess", "snapshot"])
+def test_remote_demotion_walks_worker_down_the_ladder(backend):
+    """demote_to on a channel backend round-trips to the worker: dropping
+    to INITIALIZED invalidates the remote fr caches (the next run re-does
+    the fetch); dropping to PROCESS tears down the remote runtime but the
+    process keeps serving, so re-init pays only the init share."""
+    rt = Runtime(_spec("bk_demote"), backend=make_backend(backend))
+    try:
+        rt.init()
+        rt.freshen(blocking=True)
+        assert rt.warmth is WarmthLevel.HOT
+        pid_before = (rt.backend._proc.pid if backend == "subprocess"
+                      else rt.backend.child_pid)
+        rt.demote_to(WarmthLevel.INITIALIZED)
+        assert rt.warmth is WarmthLevel.INITIALIZED
+        assert rt.run(1) == ("ok", 1, 123)    # inline refetch, same worker
+        rt.demote_to(WarmthLevel.PROCESS)
+        assert rt.warmth is WarmthLevel.PROCESS
+        assert not rt.initialized
+        assert rt.healthy()                   # the sandbox stays resident
+        rt.init()                             # re-init: init share only,
+        assert rt.initialized                 # no new spawn/fork
+        pid_after = (rt.backend._proc.pid if backend == "subprocess"
+                     else rt.backend.child_pid)
+        assert pid_after == pid_before
+        assert rt.run(2) == ("ok", 2, 123)
     finally:
         rt.close()

@@ -137,3 +137,58 @@ def test_inline_fallback_after_failing_freshen_thunk(rep):
     assert c["n"] == 1                               # inline exactly once
     s = st.stats()
     assert s["inline"] == 1 and s["hits"] == 5
+
+
+# ----------------------------------------------------------------------
+# Graded warmth ladder (PR 7): concurrent prewarms at different levels
+@pytest.mark.parametrize("rep", range(3))
+def test_concurrent_mixed_level_prewarms_converge_monotone(rep):
+    """Three racers prewarm the SAME single-instance pool to PROCESS,
+    INITIALIZED and HOT simultaneously.  Whatever the interleaving:
+    promotion is monotone (the instance ends at the highest requested
+    rung, never below), init_fn runs exactly once, and the freshen fetch
+    executes exactly once — concurrent partial warms must not stack
+    boots or re-fetch."""
+    from repro.core import FunctionSpec, InstancePool, PoolConfig, WarmthLevel
+
+    counts = {"n": 0, "inits": 0}
+
+    def init_fn(rt):
+        counts["inits"] += 1
+
+    spec = FunctionSpec("lvl_race", lambda ctx, args: args,
+                        plan_factory=lambda rt: _plan(counts),
+                        app="app", init_fn=init_fn)
+    pool = InstancePool(spec, PoolConfig(max_instances=1,
+                                         graded_warmth=True,
+                                         prewarm_provision=True))
+    levels = [WarmthLevel.PROCESS, WarmthLevel.INITIALIZED, WarmthLevel.HOT]
+    barrier = threading.Barrier(len(levels))
+    warm_threads, errors = [], []
+    lock = threading.Lock()
+
+    def racer(level):
+        try:
+            barrier.wait()
+            ths = pool.prewarm_freshen(max_dispatch=1, provision=True,
+                                       level=level)
+            with lock:
+                warm_threads.extend(ths)
+        except Exception as e:                # noqa: BLE001
+            errors.append(e)
+
+    racers = [threading.Thread(target=racer, args=(lvl,)) for lvl in levels]
+    for t in racers:
+        t.start()
+    for t in racers:
+        t.join(timeout=30)
+    for th in warm_threads:
+        th.join(timeout=30)
+    assert not errors
+    assert pool.size() == 1                   # racers share one instance
+    (inst,) = pool._instances.values()
+    inst.runtime.join_freshen(timeout=30)
+    assert inst.runtime.warmth is WarmthLevel.HOT
+    assert counts["inits"] == 1               # init_fn exactly once
+    assert counts["n"] == 1                   # freshen fetch exactly once
+    pool.close()

@@ -12,7 +12,8 @@ from concurrent.futures import wait
 import pytest
 
 from repro.core import (Accountant, FreshenScheduler, FunctionSpec,
-                        InstancePool, PoolConfig, PoolSaturated, ServiceClass)
+                        InstancePool, PoolConfig, PoolSaturated, ServiceClass,
+                        WarmthLevel)
 from repro.core.freshen import Action, FreshenPlan, PlanEntry
 from repro.core.pool import InstanceState
 
@@ -66,19 +67,18 @@ def _planned_spec(name, fetched, value="v", cost=0.0, app="app"):
 
 # ----------------------------------------------------------------------
 # Keep-alive expiry / scale-to-zero
-def test_keep_alive_reaps_pool_to_zero():
-    now = [0.0]
+def test_keep_alive_reaps_pool_to_zero(fake_clock):
     pool = InstancePool(_noop_spec(), PoolConfig(max_instances=3,
                                                  keep_alive=10.0),
-                        clock=lambda: now[0])
+                        clock=fake_clock)
     insts = [pool.acquire()[0] for _ in range(3)]
     for i in insts:
         pool.release(i)
     assert pool.size() == 3 and pool.idle_count() == 3
-    now[0] = 5.0
+    fake_clock.set(5.0)
     assert pool.reap() == 0                  # within keep-alive
     assert pool.size() == 3
-    now[0] = 20.0
+    fake_clock.set(20.0)
     assert pool.reap() == 3                  # all idle past keep-alive
     assert pool.size() == 0 and pool.idle_count() == 0
     assert all(i.state is InstanceState.REAPED for i in insts)
@@ -88,15 +88,14 @@ def test_keep_alive_reaps_pool_to_zero():
     assert pool.stats()["reaped"] == 3
 
 
-def test_reap_spares_busy_instances():
-    now = [0.0]
+def test_reap_spares_busy_instances(fake_clock):
     pool = InstancePool(_noop_spec(), PoolConfig(max_instances=2,
                                                  keep_alive=1.0),
-                        clock=lambda: now[0])
+                        clock=fake_clock)
     busy, _, _ = pool.acquire()
     idle, _, _ = pool.acquire()
     pool.release(idle)
-    now[0] = 100.0
+    fake_clock.set(100.0)
     assert pool.reap() == 1                  # only the idle one dies
     assert pool.size() == 1
     assert busy.state is InstanceState.BUSY
@@ -362,26 +361,25 @@ def test_chain_submit_through_pools():
 
 # ----------------------------------------------------------------------
 # Daemon reap sweep + stats fallback
-def test_adapt_daemon_step_reaps_idle_pools_without_traffic():
+def test_adapt_daemon_step_reaps_idle_pools_without_traffic(fake_clock):
     """InstancePool.reap only runs inside acquire/prewarm_freshen, so a
     function that goes quiet would park instances forever; the daemon's
     per-pass sweep is the traffic-independent clock tick that returns the
     pool to zero."""
     from repro.workloads import AdaptDaemon
 
-    now = [0.0]
     sched = FreshenScheduler(pool_config=PoolConfig(max_instances=2,
                                                     keep_alive=10.0))
     sched.register(_noop_spec("quiet"))
     pool = sched.pools["quiet"]
-    pool.clock = lambda: now[0]
+    pool.clock = fake_clock
     inst, _, _ = pool.acquire()
     pool.release(inst)
     assert pool.size() == 1
     daemon = AdaptDaemon(sched, adapt_pools=False)
     daemon.step()
     assert pool.size() == 1                  # within keep-alive: untouched
-    now[0] = 20.0                            # idle gap, zero traffic
+    fake_clock.set(20.0)                     # idle gap, zero traffic
     daemon.step()
     assert pool.size() == 0                  # swept to zero by the daemon
     assert daemon.reaped_swept == 1
@@ -401,4 +399,137 @@ def test_stats_and_measured_cold_start_agree_before_first_boot():
     # once measured, both switch to the observed mean together
     assert pool.measured_cold_start() == pool.stats()["measured_init_mean"]
     assert pool.measured_cold_start() >= 0.15
+    pool.close()
+
+
+# ----------------------------------------------------------------------
+# Graded warmth ladder (PR 7)
+def _graded_cfg(**kw):
+    base = dict(max_instances=2, keep_alive=8.0, graded_warmth=True,
+                keep_alive_hot=2.0, keep_alive_initialized=4.0,
+                keep_alive_process=6.0)
+    base.update(kw)
+    return PoolConfig(**base)
+
+
+def test_graded_reap_demotes_one_rung_per_sweep(fake_clock):
+    """Keep-alive expiry on a graded pool walks the ladder — HOT ->
+    INITIALIZED -> PROCESS -> reaped — exactly one rung per sweep, with
+    the idle timer restarting at each demotion."""
+    pool = InstancePool(_noop_spec(), _graded_cfg(), clock=fake_clock)
+    for th in pool.prewarm_freshen(max_dispatch=1, provision=True,
+                                   level=WarmthLevel.HOT):
+        th.join(5.0)
+    inst = next(iter(pool._instances.values()))
+    assert inst.runtime.warmth is WarmthLevel.HOT
+    fake_clock.advance(3.0)                  # > hot rung (2), < init rung (4)
+    assert pool.reap() == 0                  # demotion is not a death
+    assert inst.runtime.warmth is WarmthLevel.INITIALIZED
+    assert inst.runtime.fr_state is not None  # runtime survives, caches don't
+    fake_clock.advance(5.0)                  # > init rung since demotion
+    assert pool.reap() == 0
+    assert inst.runtime.warmth is WarmthLevel.PROCESS
+    assert inst.runtime.fr_state is None     # inited runtime torn down
+    assert pool.warm_total_count() == 0      # no longer init-warm...
+    assert pool.warm_total_count(WarmthLevel.PROCESS) == 1  # ...but resident
+    fake_clock.advance(7.0)                  # > process rung: off the ladder
+    assert pool.reap() == 1
+    assert pool.size() == 0
+    assert pool.stats()["demotions"] == 2
+
+
+def test_binary_pool_never_demotes(fake_clock):
+    """graded_warmth off: expiry stays a cliff (seed behavior)."""
+    pool = InstancePool(_noop_spec(), PoolConfig(max_instances=1,
+                                                 keep_alive=2.0),
+                        clock=fake_clock)
+    inst, _, _ = pool.acquire()
+    inst.runtime.init()
+    pool.release(inst)
+    fake_clock.advance(3.0)
+    assert pool.reap() == 1                  # reaped outright, no ladder
+    assert pool.stats()["demotions"] == 0
+
+
+def test_acquire_prefers_highest_rung_over_lifo():
+    """LIFO says "most recently released"; the warmth ladder overrides it:
+    an arrival lands on the warmest servable instance even when a colder
+    one sits on top of the stack."""
+    pool = InstancePool(_noop_spec(), PoolConfig(max_instances=2,
+                                                 keep_alive=100.0))
+    warm, _, _ = pool.acquire()
+    cold, _, _ = pool.acquire()
+    warm.runtime.init()
+    pool.release(warm)                       # bottom of the LIFO stack
+    pool.release(cold)                       # top of the stack, but COLD
+    inst, _, was_cold = pool.acquire()
+    assert inst is warm and not was_cold
+    pool.close()
+
+
+def test_process_standby_acquire_pays_partial_cold(fake_clock):
+    """An arrival on a PROCESS standby is still billed a cold start (the
+    init share remains), but the pool records it as partial — the sandbox
+    share was prepaid by the ladder."""
+    pool = InstancePool(_noop_spec(), _graded_cfg(max_instances=1),
+                        clock=fake_clock)
+    for th in pool.prewarm_freshen(max_dispatch=1, provision=True,
+                                   level=WarmthLevel.PROCESS):
+        th.join(5.0)
+    assert pool.warm_total_count(WarmthLevel.PROCESS) == 1
+    assert pool.warm_idle_count() == 0       # standby is not init-warm
+    inst, _, was_cold = pool.acquire()
+    assert was_cold
+    assert inst.runtime.warmth is WarmthLevel.PROCESS
+    s = pool.stats()
+    assert s["cold_starts"] == 1 and s["partial_cold_starts"] == 1
+    pool.close()
+
+
+def test_lower_level_prewarm_never_demotes_warm_instances():
+    """prewarm(level=PROCESS) on a pool whose idle instance is already
+    INITIALIZED must not touch it — partial prewarm only promotes."""
+    pool = InstancePool(_noop_spec(), _graded_cfg(max_instances=1))
+    inst, _, _ = pool.acquire()
+    inst.runtime.init()
+    pool.release(inst)
+    ths = pool.prewarm_freshen(max_dispatch=1, provision=True,
+                               level=WarmthLevel.PROCESS)
+    for th in ths:
+        th.join(5.0)
+    assert inst.runtime.warmth >= WarmthLevel.INITIALIZED
+    pool.close()
+
+
+def test_warm_idle_count_excludes_inflight_freshen():
+    """Regression (PR 7 audit): warm_idle_count used to count instances
+    whose freshen was still mid-flight, but acquire's warm path prefers
+    to skip those — so routing saw warmth an arrival could not actually
+    land on without blocking behind the fetch.  The signal now matches
+    acquire's first preference."""
+    gate = threading.Event()
+
+    def make_plan(rt):
+        def fetch():
+            gate.wait(10.0)
+            return "v"
+        return FreshenPlan([PlanEntry("r0", Action.FETCH, fetch)])
+
+    spec = FunctionSpec("f", lambda ctx, args: ctx.fr_fetch(0),
+                        plan_factory=make_plan, app="app")
+    pool = InstancePool(spec, PoolConfig(max_instances=2))
+    inst, _, _ = pool.acquire()
+    inst.runtime.init()
+    pool.release(inst)
+    assert pool.warm_idle_count() == 1
+    ths = pool.prewarm_freshen(max_dispatch=1)   # blocks on the gated fetch
+    try:
+        assert pool.warm_idle_count() == 0       # mid-flight: not servable
+        assert pool.warm_total_count() == 1      # ...but still resident
+        assert pool.warmth_score() == 0.0        # routing signal agrees
+    finally:
+        gate.set()
+        for th in ths:
+            th.join(5.0)
+    assert pool.warm_idle_count() == 1
     pool.close()

@@ -10,6 +10,11 @@
 5. Connection model: warming never hurts; transfer time is monotone in size.
 6. MoE dispatch equivalence: einsum and gather dispatch agree for any
    routing produced by random inputs.
+7. Pool state machine (PR 7 warmth ladder): under ANY interleaving of
+   prewarm(level)/acquire/release/reap/retire, warmth counts stay ordered
+   (warm_idle <= warm_total <= size <= cap), graded reaping never skips a
+   rung downward, acquire accounting balances, and every admitted future
+   resolves.
 """
 import threading
 import time
@@ -152,3 +157,124 @@ def test_moe_dispatch_paths_agree(seed, toks):
     out_g, _ = moe_apply(p, x, cfg_g)
     np.testing.assert_allclose(np.asarray(out_e), np.asarray(out_g),
                                atol=1e-5, rtol=1e-5)
+
+
+# ----------------------------------------------------------------------
+# Pool state machine under random interleavings (PR 7 warmth ladder).
+# FakeClock comes straight from conftest (hypothesis forbids
+# function-scoped fixtures under @given); warm-up threads are joined
+# after each op so the interleaving stays the one hypothesis chose.
+from conftest import FakeClock  # noqa: E402
+
+from repro.core import (FreshenScheduler, FunctionSpec, InstancePool,  # noqa: E402
+                        PoolConfig, PoolSaturated, WarmthLevel)
+
+_POOL_OPS = st.sampled_from(
+    ["acquire", "release", "reap", "advance",
+     "prewarm_process", "prewarm_init", "prewarm_hot"])
+
+
+def _pool_invariants(pool, cap, acquires):
+    size = pool.size()
+    warm_idle = pool.warm_idle_count()
+    warm_total = pool.warm_total_count()
+    assert warm_idle <= warm_total <= size <= cap
+    # the ladder is cumulative: counting from a lower rung up can only
+    # see more instances
+    assert (pool.warm_idle_count(WarmthLevel.PROCESS)
+            >= pool.warm_idle_count(WarmthLevel.INITIALIZED)
+            >= pool.warm_idle_count(WarmthLevel.HOT))
+    s = pool.stats()
+    assert sum(s["levels"].values()) == size
+    # every admitted acquire was billed exactly once, cold or warm
+    assert s["cold_starts"] + s["warm_acquires"] == acquires
+
+
+@settings(max_examples=30, deadline=None)
+@given(ops=st.lists(st.tuples(_POOL_OPS, st.integers(0, 7)),
+                    min_size=1, max_size=40),
+       graded=st.booleans())
+def test_pool_state_machine_invariants(ops, graded):
+    clock = FakeClock()
+    cap = 3
+    cfg = PoolConfig(max_instances=cap, keep_alive=10.0,
+                     graded_warmth=graded, keep_alive_hot=4.0,
+                     keep_alive_initialized=8.0, keep_alive_process=12.0)
+    pool = InstancePool(FunctionSpec("p", lambda ctx, args: args, app="prop"),
+                        cfg, clock=clock)
+    levels = {"prewarm_process": WarmthLevel.PROCESS,
+              "prewarm_init": WarmthLevel.INITIALIZED,
+              "prewarm_hot": WarmthLevel.HOT}
+    held, acquires = [], 0
+    try:
+        for op, k in ops:
+            if op == "acquire":
+                try:
+                    inst, _, _ = pool.acquire(timeout=0.0)
+                    held.append(inst)
+                    acquires += 1
+                except PoolSaturated:
+                    pass
+            elif op == "release":
+                if held:
+                    pool.release(held.pop(k % len(held)))
+            elif op == "advance":
+                clock.advance((1.0, 3.0, 5.0, 9.0, 13.0)[k % 5])
+            elif op == "reap":
+                before = {iid: inst.runtime.warmth
+                          for iid, inst in pool._instances.items()}
+                pool.reap()
+                for iid, inst in pool._instances.items():
+                    # graded expiry walks at most ONE rung per sweep;
+                    # binary reaping never demotes at all
+                    floor = before[iid] - 1 if graded else before[iid]
+                    assert inst.runtime.warmth >= floor, \
+                        (before[iid], inst.runtime.warmth)
+            else:
+                for th in pool.prewarm_freshen(max_dispatch=1,
+                                               provision=True,
+                                               level=levels[op]):
+                    th.join(10.0)
+            _pool_invariants(pool, cap, acquires)
+    finally:
+        pool.retire()
+        for inst in held:
+            pool.release(inst)
+    assert pool.size() == 0 and pool.idle_count() == 0
+
+
+@settings(max_examples=8, deadline=None)
+@given(ops=st.lists(st.sampled_from(
+    ["submit", "prewarm_hot", "prewarm_process", "sweep", "idle"]),
+    min_size=1, max_size=12))
+def test_scheduler_never_loses_admitted_futures(ops):
+    """Whatever interleaving of traffic, partial/full prewarms and reap
+    sweeps hits a graded pool, every future submit() admitted resolves to
+    the right value — demotion and scale-to-zero may slow an arrival but
+    can never drop or corrupt one."""
+    sched = FreshenScheduler(pool_config=PoolConfig(
+        max_instances=2, keep_alive=0.2, graded_warmth=True,
+        keep_alive_hot=0.02, keep_alive_initialized=0.05,
+        keep_alive_process=0.2, prewarm_provision=True))
+    sched.register(FunctionSpec("g", lambda ctx, args: ("ok", args),
+                                app="prop"))
+    futs = []
+    try:
+        for i, op in enumerate(ops):
+            if op == "submit":
+                futs.append((i, sched.submit("g", i,
+                                             freshen_successors=False)))
+            elif op == "prewarm_hot":
+                sched.prewarm("g", level=WarmthLevel.HOT)
+            elif op == "prewarm_process":
+                sched.prewarm("g", level=WarmthLevel.PROCESS)
+            elif op == "sweep":
+                sched.pools["g"].reap()
+            else:
+                time.sleep(0.03)       # let keep-alives expire for real
+        for i, f in futs:
+            assert f.result(timeout=30) == ("ok", i)
+        s = sched.pools["g"].stats()
+        assert s["cold_starts"] + s["warm_acquires"] == len(futs)
+    finally:
+        sched.shutdown()

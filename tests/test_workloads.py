@@ -204,13 +204,12 @@ def test_history_policy_prime_seeds_recurrence_scaled():
 
 # ----------------------------------------------------------------------
 # Live pool reconfiguration
-def test_reconfigure_changes_reap_policy_live():
-    now = [0.0]
+def test_reconfigure_changes_reap_policy_live(fake_clock):
     pool = InstancePool(_noop_spec("f"), PoolConfig(keep_alive=100.0),
-                        clock=lambda: now[0])
+                        clock=fake_clock)
     inst, _, _ = pool.acquire()
     pool.release(inst)
-    now[0] = 50.0
+    fake_clock.set(50.0)
     assert pool.reap() == 0
     old = pool.reconfigure(PoolConfig(keep_alive=10.0))
     assert old.keep_alive == 100.0
