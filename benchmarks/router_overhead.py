@@ -1,0 +1,173 @@
+"""Per-phase hot-path latency breakdown for the serving fabric, and the
+price of measuring it.
+
+Drives a pool_load-style bursty workload (self-edge freshen, idle gaps
+longer than keep-alive so each burst restarts cold) through a two-shard
+``ClusterRouter`` twice — telemetry OFF (the ``NULL_TRACER`` fast path)
+and telemetry ON (a shared fabric ``Tracer``) — and reports:
+
+* the tracing overhead itself: p50 end-to-end OFF vs ON (the
+  zero-overhead-when-disabled claim is the OFF run; the ON run prices
+  span allocation + clock reads on the hot path);
+* where each request's time goes: mean microseconds per phase
+  (``route`` / ``queue`` / ``acquire`` / ``boot_*`` / ``warm_to`` /
+  ``run`` / ``release``) over every completed invocation span;
+* reconciliation: the span-side view (``acquire``+``run``+``release``,
+  the phases covering exactly what the Accountant bills as queueing
+  delay + service time) must agree with the Accountant's own e2e
+  samples within ~10%, or one of the two clocks is lying;
+* the freshen lifecycle tally (landed / expired / gated) from the same
+  trace.
+
+The ON run also exports the Chrome trace (``ROUTER_OVERHEAD_TRACE``,
+default ``router_overhead_trace.json``) — load it in chrome://tracing
+or summarize with ``tools/trace_view.py``.  ``ROUTER_OVERHEAD_SMOKE=1``
+shrinks the run for CI (same phases, fewer arrivals).
+
+CSV rows (stdout; schema in docs/benchmarks.md): ``name`` is
+``router_overhead/<off|on|phase/<phase>|reconcile|freshen_tally>``,
+``us_per_call`` is p50 e2e (off/on), mean phase microseconds (phase
+rows), or the absolute span-vs-accountant delta (reconcile);
+``derived`` packs the row-specific fields documented there.
+
+Run on CPU:  PYTHONPATH=src python benchmarks/router_overhead.py
+(or: PYTHONPATH=src:. python benchmarks/run.py router_overhead)
+"""
+import os
+import sys
+import time
+
+import numpy as np
+
+from repro.cluster.router import ClusterRouter
+from repro.core import FunctionSpec, PoolConfig, ServiceClass
+from repro.core.accounting import percentile
+from repro.telemetry import Tracer
+
+SMOKE = bool(os.environ.get("ROUTER_OVERHEAD_SMOKE"))
+TRACE_PATH = os.environ.get("ROUTER_OVERHEAD_TRACE",
+                            "router_overhead_trace.json")
+
+COMPUTE_COST = 0.002    # seconds: the function body
+COLD_START = 0.010      # seconds: simulated sandbox creation
+KEEP_ALIVE = 0.30       # idle seconds before reap
+SHARDS = 2
+BURSTS = 2 if SMOKE else 3
+BURST_ARRIVALS = 12 if SMOKE else 40
+BURST_RATE = 120.0      # arrivals/second inside a burst (Poisson)
+GAP = 0.40              # idle seconds between bursts (> KEEP_ALIVE)
+
+
+def _spec() -> FunctionSpec:
+    def code(ctx, args):
+        time.sleep(COMPUTE_COST)
+        return args
+
+    return FunctionSpec("frontend", code, app="bench")
+
+
+def _drive(tracer):
+    """One full workload pass; returns (accountant e2e samples, wall)."""
+    cfg = PoolConfig(max_instances=6, keep_alive=KEEP_ALIVE,
+                     cold_start_cost=COLD_START,
+                     prewarm_provision=True, prewarm_fanout=2)
+    cluster = ClusterRouter.build(SHARDS, pool_config=cfg,
+                                  max_router_threads=32, tracer=tracer)
+    cluster.register(_spec())
+    # self-edge: every arrival prewarm-freshens for the ones behind it
+    cluster.predictor.graph.add_edge("frontend", "frontend", 1.0, 0.01)
+    for w in cluster.workers:
+        w.scheduler.accountant.service_class["bench"] = \
+            ServiceClass.LATENCY_SENSITIVE
+    rng = np.random.default_rng(0)
+    t0 = time.monotonic()
+    futs = []
+    for burst in range(BURSTS):
+        base = burst * (BURST_ARRIVALS / BURST_RATE + GAP)
+        t = base
+        for g in rng.exponential(1.0 / BURST_RATE, size=BURST_ARRIVALS):
+            t += g
+            delay = t0 + t - time.monotonic()
+            if delay > 0:
+                time.sleep(delay)        # open loop: fire on schedule
+            futs.append(cluster.submit("frontend", len(futs)))
+    for f in futs:
+        f.result(timeout=60)
+    wall = time.monotonic() - t0
+    # e2e percentiles do not compose across shards: merge raw samples
+    samples = []
+    for w in cluster.workers:
+        samples.extend(w.scheduler.accountant.latency_samples("bench"))
+    cluster.shutdown()
+    return samples, wall
+
+
+def run():
+    """Harness entry (benchmarks/run.py): CSV rows name,us_per_call,derived."""
+    err = sys.stderr
+    n = BURSTS * BURST_ARRIVALS
+    off_samples, off_wall = _drive(None)
+    tracer = Tracer(capacity=8192)
+    on_samples, on_wall = _drive(tracer)
+    snap = tracer.snapshot()
+    events = tracer.export_chrome(TRACE_PATH)
+
+    p50_off = percentile(off_samples, 50)
+    p50_on = percentile(on_samples, 50)
+    overhead = (p50_on - p50_off) / p50_off if p50_off else 0.0
+
+    # reconciliation: acquire+run+release are exactly the window the
+    # Accountant bills (queue_delay + service time)
+    spans = [s for s in snap["invocations"] if s["end"] is not None]
+    billed_phases = ("acquire", "run", "release")
+    span_e2e = []
+    for s in spans:
+        span_e2e.append(sum(p["duration"] for p in s["phases"]
+                            if p["name"] in billed_phases))
+    span_mean = sum(span_e2e) / len(span_e2e) if span_e2e else 0.0
+    acct_mean = sum(on_samples) / len(on_samples) if on_samples else 0.0
+    delta = abs(span_mean - acct_mean)
+    delta_pct = 100.0 * delta / acct_mean if acct_mean else 0.0
+
+    tally = snap["freshen_tally"]
+    print(f"\n=== router_overhead ({n} requests, {SHARDS} shards, "
+          f"{BURSTS} bursts{', SMOKE' if SMOKE else ''}) ===", file=err)
+    print(f"p50 e2e: telemetry OFF {p50_off*1e3:.2f}ms / "
+          f"ON {p50_on*1e3:.2f}ms ({overhead:+.1%})", file=err)
+    print(f"{'phase':>14s} {'mean':>10s} {'count':>6s} {'share':>7s}",
+          file=err)
+    total_mean = sum(t["seconds"] for t in snap["phase_totals"].values())
+    rows = [
+        (f"router_overhead/off", f"{p50_off*1e6:.0f}",
+         f"p95us={percentile(off_samples, 95)*1e6:.0f};n={len(off_samples)}"),
+        (f"router_overhead/on", f"{p50_on*1e6:.0f}",
+         f"p95us={percentile(on_samples, 95)*1e6:.0f};"
+         f"overhead_pct={overhead*100:.1f}"),
+    ]
+    for name, t in sorted(snap["phase_totals"].items(),
+                          key=lambda kv: -kv[1]["seconds"]):
+        share = t["seconds"] / total_mean if total_mean else 0.0
+        print(f"{name:>14s} {t['mean']*1e6:9.0f}us {t['count']:6d} "
+              f"{share:6.1%}", file=err)
+        rows.append((f"router_overhead/phase/{name}",
+                     f"{t['mean']*1e6:.0f}",
+                     f"count={t['count']};share_pct={share*100:.1f}"))
+    print(f"reconcile: span(acquire+run+release) {span_mean*1e3:.2f}ms vs "
+          f"accountant e2e {acct_mean*1e3:.2f}ms "
+          f"(delta {delta_pct:.1f}%)", file=err)
+    print(f"freshen spans: landed={tally['landed']} "
+          f"expired={tally['expired']} gated={tally['gated']} | "
+          f"{events} chrome events -> {TRACE_PATH}", file=err)
+    rows.append(("router_overhead/reconcile", f"{delta*1e6:.0f}",
+                 f"span_us={span_mean*1e6:.0f};acct_us={acct_mean*1e6:.0f};"
+                 f"delta_pct={delta_pct:.1f}"))
+    rows.append(("router_overhead/freshen_tally", "0",
+                 f"landed={tally['landed']};expired={tally['expired']};"
+                 f"gated={tally['gated']};complete={len(spans)}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for row in run():
+        print(",".join(str(x) for x in row))

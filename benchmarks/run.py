@@ -9,7 +9,8 @@ def main() -> None:
     from benchmarks import (backend_cold_start, chain_e2e, cluster_scale,
                             elastic_shards, fig4_fetch, fig5_warming,
                             pool_load, prediction_quality, roofline,
-                            table1_triggers, trace_replay, warmth_levels)
+                            router_overhead, table1_triggers, trace_replay,
+                            warmth_levels)
     mods = [("table1_triggers", table1_triggers),
             ("fig4_fetch", fig4_fetch),
             ("fig5_warming", fig5_warming),
@@ -21,6 +22,7 @@ def main() -> None:
             ("cluster_scale", cluster_scale),
             ("elastic_shards", elastic_shards),
             ("warmth_levels", warmth_levels),
+            ("router_overhead", router_overhead),
             ("roofline", roofline)]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

@@ -50,6 +50,7 @@ from repro.core.accounting import Accountant
 from repro.core.pool import PoolConfig, PoolSaturated
 from repro.core.prediction import HybridPredictor, Prediction
 from repro.core.runtime import FunctionSpec, Runtime
+from repro.telemetry import MetricsRegistry, NULL_TRACER, Tracer
 
 from repro.cluster.accounting import ClusterAccountant
 from repro.cluster.worker import ClusterWorker
@@ -189,9 +190,11 @@ class ClusterRouter:
     def __init__(self, workers: Sequence[ClusterWorker],
                  policy: Union[str, object] = "warmth-aware",
                  spill_timeout: Optional[float] = None,
-                 cross_freshen: bool = True):
+                 cross_freshen: bool = True,
+                 tracer: Optional[Tracer] = None):
         if not workers:
             raise ValueError("a cluster needs at least one worker")
+        self.tracer = tracer or NULL_TRACER
         self._workers: List[ClusterWorker] = list(workers)
         self._by_shard = {w.shard_id: w for w in self._workers}
         if len(self._by_shard) != len(self._workers):
@@ -219,17 +222,47 @@ class ClusterRouter:
         self._next_shard = max(self._by_shard) + 1
         self._registry: Dict[str, _Registration] = {}
         self._departed: List[int] = []
-        self.added = 0
-        self.removed = 0
-        # router counters (read under the lock via stats())
+        # scalar router counters live in the registry (the legacy
+        # attribute names below are read-only property views); the
+        # per-shard dicts stay plain ints mutated and copied under
+        # ``_lock``, which already makes their snapshots consistent
+        self.metrics = MetricsRegistry("router.")
+        self._c_added = self.metrics.counter("added")
+        self._c_removed = self.metrics.counter("removed")
+        self._c_cross = self.metrics.counter("cross_freshens")
+        self._c_local = self.metrics.counter("local_freshens")
+        self._c_spills = self.metrics.counter("spills")
         self.routed: Dict[int, int] = {w.shard_id: 0 for w in self._workers}
-        self.cross_freshens = 0
-        self.local_freshens = 0
-        self.spills = 0
         self.saturations: Dict[int, int] = {w.shard_id: 0
                                             for w in self._workers}
         for w in self._workers:
             self._hook_freshen_route(w)
+            # one tracer spans the fabric: a shard built without its own
+            # inherits the router's, so cross-shard freshens and the
+            # arrivals they anchor share one pending table
+            if self.tracer.enabled and not w.scheduler.tracer.enabled:
+                w.scheduler.tracer = self.tracer
+
+    # -- legacy counter views (registry-backed) --------------------------
+    @property
+    def added(self) -> int:
+        return self._c_added.value
+
+    @property
+    def removed(self) -> int:
+        return self._c_removed.value
+
+    @property
+    def cross_freshens(self) -> int:
+        return self._c_cross.value
+
+    @property
+    def local_freshens(self) -> int:
+        return self._c_local.value
+
+    @property
+    def spills(self) -> int:
+        return self._c_spills.value
 
     def _hook_freshen_route(self, w: ClusterWorker):
         w.scheduler.freshen_route = (
@@ -245,21 +278,24 @@ class ClusterRouter:
               devices: Optional[Sequence] = None,
               max_router_threads: int = 16,
               spill_timeout: Optional[float] = None,
-              cross_freshen: bool = True) -> "ClusterRouter":
+              cross_freshen: bool = True,
+              tracer: Optional[Tracer] = None) -> "ClusterRouter":
         """A local cluster: ``num_shards`` workers sharing one predictor
-        (prediction is global knowledge) with per-shard accountants.
-        ``devices`` (optional jax device list) is partitioned round-robin
-        so each worker pins its functions to a distinct slice."""
+        (prediction is global knowledge) and one tracer (spans must link
+        across shards) with per-shard accountants.  ``devices`` (optional
+        jax device list) is partitioned round-robin so each worker pins
+        its functions to a distinct slice."""
         predictor = predictor or HybridPredictor()
         slices = partition_devices(devices, num_shards)
         workers = [ClusterWorker(k, predictor=predictor,
                                  accountant=Accountant(),
                                  pool_config=pool_config,
                                  devices=slices[k],
-                                 max_router_threads=max_router_threads)
+                                 max_router_threads=max_router_threads,
+                                 tracer=tracer)
                    for k in range(num_shards)]
         return cls(workers, policy=policy, spill_timeout=spill_timeout,
-                   cross_freshen=cross_freshen)
+                   cross_freshen=cross_freshen, tracer=tracer)
 
     @property
     def workers(self) -> List[ClusterWorker]:
@@ -350,7 +386,11 @@ class ClusterRouter:
                     pool_config=pool_config or template.pool_config,
                     devices=devices,
                     max_router_threads=(max_router_threads
-                                        or template.max_router_threads))
+                                        or template.max_router_threads),
+                    tracer=self.tracer if self.tracer.enabled else None)
+            elif self.tracer.enabled and not worker.scheduler.tracer.enabled:
+                # adopted workers join the fabric-wide tracer too
+                worker.scheduler.tracer = self.tracer
             for reg in registrations:
                 worker.register(
                     reg.spec,
@@ -364,7 +404,7 @@ class ClusterRouter:
                 self._by_shard[worker.shard_id] = worker
                 self.routed.setdefault(worker.shard_id, 0)
                 self.saturations.setdefault(worker.shard_id, 0)
-                self.added += 1
+                self._c_added.inc()
             return worker
 
     def remove_worker(self, shard: int, drain: bool = True,
@@ -401,7 +441,7 @@ class ClusterRouter:
             worker = self._by_shard.pop(shard)
             self._workers.remove(worker)
             self._departed.append(shard)
-            self.removed += 1
+            self._c_removed.inc()
         worker.begin_drain()
         report = DrainReport(shard=shard, drained=drain,
                              inflight_at_removal=worker.load())
@@ -479,23 +519,36 @@ class ClusterRouter:
         set, saturation on the chosen shard drains the request to the
         neighbor with the most idle capacity instead of failing."""
         self._check_open()
-        shard = self.route(fn)
+        span = self.tracer.invocation(fn)
+        with span.phase("route", policy=self.policy.name):
+            shard = self.route(fn)
+        span.annotate(shard=shard)
         if self.spill_timeout is None:
             with self._lock:
                 worker = self._by_shard.get(shard)
                 self.routed[shard] = self.routed.get(shard, 0) + 1
             if worker is None:       # removed between route() and here
+                span.finish(error="ShardDeparted")
                 return self.submit(fn, args, freshen_successors)
             try:
-                return worker.submit(fn, args, freshen_successors)
+                return worker.submit(fn, args, freshen_successors,
+                                     _span=span)
             except RuntimeError:     # began draining after the lookup
+                span.finish(error="ShardDraining")
                 return self.submit(fn, args, freshen_successors)
         outer: Future = Future()
-        self._attempt(fn, args, freshen_successors, shard, set(), outer)
+        self._attempt(fn, args, freshen_successors, shard, set(), outer,
+                      _span=span)
         return outer
 
     def _attempt(self, fn: str, args, freshen: bool, shard: int,
-                 tried: set, outer: Future):
+                 tried: set, outer: Future, _span=None):
+        # each attempt owns one span: the saturated attempt's span was
+        # finished (with the error) by the shard scheduler, so a spill
+        # retry opens a fresh one marked ``spilled``
+        span = _span if _span is not None else self.tracer.invocation(
+            fn, spilled=True)
+        span.annotate(shard=shard)
         tried.add(shard)
         with self._lock:
             worker = self._by_shard.get(shard)
@@ -505,6 +558,7 @@ class ClusterRouter:
         if worker is None:
             # the chosen shard departed between selection and submission:
             # retry on a survivor (or fail loudly when none remains)
+            span.finish(error="ShardDeparted")
             if rest:
                 self._attempt(fn, args, freshen, rest[0], tried, outer)
             else:
@@ -515,8 +569,10 @@ class ClusterRouter:
         # somewhere, and by then every alternative has been offered
         timeout = self.spill_timeout if rest else None
         try:
-            inner = worker.submit(fn, args, freshen, acquire_timeout=timeout)
+            inner = worker.submit(fn, args, freshen, acquire_timeout=timeout,
+                                  _span=span)
         except RuntimeError as e:    # began draining after the lookup
+            span.finish(error="ShardDraining")
             if rest:
                 self._attempt(fn, args, freshen, rest[0], tried, outer)
             else:
@@ -534,7 +590,7 @@ class ClusterRouter:
                     return
                 if isinstance(exc, PoolSaturated) and rest:
                     with self._lock:
-                        self.spills += 1
+                        self._c_spills.inc()
                         self.saturations[shard] = \
                             self.saturations.get(shard, 0) + 1
                         # hold worker refs, not ids: a shard departing
@@ -596,7 +652,7 @@ class ClusterRouter:
             return None
         if target == origin:
             with self._lock:
-                self.local_freshens += 1
+                self._c_local.inc()
             return None
         with self._lock:
             worker = self._by_shard.get(target)
@@ -605,7 +661,7 @@ class ClusterRouter:
         dispatched = worker.scheduler._dispatch_freshen(pred, _routed=True)
         if dispatched:
             with self._lock:
-                self.cross_freshens += 1
+                self._c_cross.inc()
         return dispatched
 
     def prewarm(self, fn: str, provision: bool = True):
@@ -663,6 +719,16 @@ class ClusterRouter:
         for w in self.workers:
             for fn, stats in w.scheduler.platform_stats().items():
                 out[f"shard{w.shard_id}/{fn}"] = stats
+        return out
+
+    def metrics_snapshot(self) -> dict:
+        """Unified registry dump across the fabric: router instruments
+        plus every shard scheduler's (and its pools'), prefixed
+        ``shard<k>.``."""
+        out = dict(self.metrics.snapshot())
+        for w in self.workers:
+            for key, val in w.scheduler.metrics_snapshot().items():
+                out[f"shard{w.shard_id}.{key}"] = val
         return out
 
     def shutdown(self, wait: bool = True):

@@ -23,6 +23,7 @@ from repro.core.pool import InstancePool, PoolConfig
 from repro.core.prediction import HybridPredictor
 from repro.core.runtime import FunctionSpec, Runtime
 from repro.core.scheduler import FreshenScheduler
+from repro.telemetry import Tracer
 
 
 class ClusterWorker:
@@ -41,15 +42,20 @@ class ClusterWorker:
                  accountant: Optional[Accountant] = None,
                  pool_config: Optional[PoolConfig] = None,
                  devices: Optional[Sequence] = None,
-                 max_router_threads: int = 16):
+                 max_router_threads: int = 16,
+                 tracer: Optional[Tracer] = None):
         self.shard_id = shard_id
         self.devices = list(devices) if devices else None
         # set by ClusterRouter.remove_worker: a draining shard finishes
         # its in-flight work but admits nothing new
         self.draining = False
+        # like the predictor, the tracer is cluster-shared: a freshen
+        # dispatched on this shard and the arrival it anchored (possibly
+        # routed elsewhere) must meet in one pending table
         self.scheduler = FreshenScheduler(
             predictor=predictor, accountant=accountant,
-            pool_config=pool_config, max_router_threads=max_router_threads)
+            pool_config=pool_config, max_router_threads=max_router_threads,
+            tracer=tracer)
 
     # -- registration ---------------------------------------------------
     def _pinned(self, code):
@@ -115,10 +121,11 @@ class ClusterWorker:
 
     def submit(self, fn: str, args: Any = None,
                freshen_successors: bool = True,
-               acquire_timeout: Optional[float] = None) -> Future:
+               acquire_timeout: Optional[float] = None,
+               _span=None) -> Future:
         self._check_admitting()
         return self.scheduler.submit(fn, args, freshen_successors,
-                                     acquire_timeout)
+                                     acquire_timeout, _span=_span)
 
     def submit_chain(self, fns: List[str], args: Any = None,
                      freshen: bool = True) -> Future:
@@ -170,24 +177,24 @@ class ClusterWorker:
     def load(self, fn: Optional[str] = None) -> int:
         """Busy instances + blocked acquires — the least-loaded policy's
         signal.  Whole-shard by default: one worker's instances share the
-        shard's hardware, so load on any pool slows every pool."""
+        shard's hardware, so load on any pool slows every pool.  Each
+        pool's contribution is read under one lock (``InstancePool.load``)
+        — summing busy and waiting from separate lock acquisitions tears
+        across a concurrent release and double-counts."""
         pools = self.scheduler.pools
         if fn is not None:
             pool = pools.get(fn)
-            return ((pool.busy_count() + pool.waiting_count())
-                    if pool is not None else 0)
-        return sum(p.busy_count() + p.waiting_count()
-                   for p in pools.values())
+            return pool.load() if pool is not None else 0
+        return sum(p.load() for p in pools.values())
 
     def idle_capacity(self, fn: str) -> int:
         """Instances ``fn`` could run on here without queueing: idle ones
         plus the headroom below the pool cap.  Rebalancing drains a hot
-        shard's queue toward the neighbor maximizing this."""
+        shard's queue toward the neighbor maximizing this.  One lock
+        acquisition (``InstancePool.idle_capacity``): the former
+        stats()-then-config read could tear across a reconfigure."""
         pool = self.scheduler.pools.get(fn)
-        if pool is None:
-            return 0
-        s = pool.stats()
-        return s["idle"] + max(0, pool.config.max_instances - s["instances"])
+        return pool.idle_capacity() if pool is not None else 0
 
     # -- lifecycle ------------------------------------------------------
     def stats(self) -> dict:

@@ -39,8 +39,10 @@ def _percentile_sorted(vals: Sequence[float], q: float) -> float:
 
 def percentile(values: Sequence[float], q: float) -> float:
     """Linear-interpolated percentile (numpy-free; core stays dependency
-    light).  ``q`` in [0, 100]."""
-    return _percentile_sorted(sorted(values), q)
+    light).  ``q`` is clamped to [0, 100] and empty inputs return 0.0, so
+    monitoring paths querying an idle platform get zeros instead of an
+    IndexError."""
+    return _percentile_sorted(sorted(values), min(100.0, max(0.0, q)))
 
 
 class ServiceClass(Enum):
@@ -201,13 +203,18 @@ class Accountant:
     def latency_summary(self, app: str) -> dict:
         """p50/p95/p99 end-to-end latency, queueing delay, and cold starts
         for one application — the tail-latency view of the platform, over
-        the last ``latency_window`` invocations."""
+        the last ``latency_window`` invocations.
+
+        An unknown or not-yet-billed app yields a well-formed all-zero
+        summary — and, like ``peek_bill``, never inserts a phantom ledger
+        entry: monitoring loops polling arbitrary app names must not grow
+        ``_bills`` (or skew ``apps()``) just by looking."""
         with self._lock:
             lats = sorted(self._latencies.get(app, []))
             qds = list(self._queue_delays.get(app, []))
-            b = self._bills.setdefault(app, AppBill())
-            cold = b.cold_starts
-            invocations = b.function_invocations
+            b = self._bills.get(app)
+            cold = b.cold_starts if b is not None else 0
+            invocations = b.function_invocations if b is not None else 0
         return {
             "count": len(lats),
             "p50": _percentile_sorted(lats, 50),

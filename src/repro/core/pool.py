@@ -38,6 +38,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.backend import make_backend
 from repro.core.runtime import FunctionSpec, Runtime, WarmthLevel
+from repro.telemetry import MetricsRegistry
 
 
 @dataclass
@@ -137,18 +138,24 @@ class InstancePool:
         self._next_id = 0
         self._waiting = 0
         self._retired = False         # retire(): released instances close
-        # counters (read under the lock via stats())
-        self.cold_starts = 0          # acquires that landed on an uninit instance
-        self.warm_acquires = 0
-        self.queued_acquires = 0      # acquires that had to wait
-        self.reaped = 0
-        self.dead_evictions = 0       # instances evicted because the backend
-                                      # substrate died (worker/fork gone)
-        self.demotions = 0            # graded keep-alive: one-rung drops
-        self.partial_cold_starts = 0  # cold acquires that landed on a
-                                      # partial-warm (PROCESS) instance
-        self.prewarm_dispatches = 0
-        self.prewarm_provisioned = 0
+        # lifecycle counters live in the pool's own metrics registry;
+        # the legacy attribute names (``pool.cold_starts`` …) are
+        # read-only property views below, and ``stats()`` still copies
+        # the whole set under the pool lock in one go (never
+        # field-by-field from outside — that tears)
+        self.metrics = MetricsRegistry(f"pool.{spec.name}.")
+        self._c_cold = self.metrics.counter("cold_starts")
+        self._c_warm = self.metrics.counter("warm_acquires")
+        self._c_queued = self.metrics.counter("queued_acquires")
+        self._c_reaped = self.metrics.counter("reaped")
+        self._c_dead = self.metrics.counter("dead_evictions")
+        self._c_demotions = self.metrics.counter("demotions")
+        self._c_partial = self.metrics.counter("partial_cold_starts")
+        self._c_prewarms = self.metrics.counter("prewarm_dispatches")
+        self._c_provisioned = self.metrics.counter("prewarm_provisioned")
+        self._h_queue_delay = self.metrics.histogram("queue_delay_seconds")
+        self.metrics.gauge("instances").set_fn(self.size)
+        self.metrics.gauge("idle").set_fn(self.idle_count)
         # lifetime fr_state counters of reaped instances, folded in by
         # reap() so freshen_stats() is a lifetime view, not survivors-only
         self._reaped_freshen_stats = {"freshened": 0, "inline": 0,
@@ -171,6 +178,45 @@ class InstancePool:
         with self._cond:
             for _ in range(eager_instances):
                 self._create_locked()
+
+    # -- legacy counter views (registry-backed) --------------------------
+    # callers and tests read these as plain ints; writes go through the
+    # registry counters at the increment sites
+    @property
+    def cold_starts(self) -> int:
+        return self._c_cold.value
+
+    @property
+    def warm_acquires(self) -> int:
+        return self._c_warm.value
+
+    @property
+    def queued_acquires(self) -> int:
+        return self._c_queued.value
+
+    @property
+    def reaped(self) -> int:
+        return self._c_reaped.value
+
+    @property
+    def dead_evictions(self) -> int:
+        return self._c_dead.value
+
+    @property
+    def demotions(self) -> int:
+        return self._c_demotions.value
+
+    @property
+    def partial_cold_starts(self) -> int:
+        return self._c_partial.value
+
+    @property
+    def prewarm_dispatches(self) -> int:
+        return self._c_prewarms.value
+
+    @property
+    def prewarm_provisioned(self) -> int:
+        return self._c_provisioned.value
 
     # -- construction ---------------------------------------------------
     def _ensure_template(self):
@@ -298,6 +344,25 @@ class InstancePool:
         with self._cond:
             return len(self._instances) - len(self._idle)
 
+    def load(self) -> int:
+        """Busy instances + blocked acquires under ONE lock acquisition —
+        the cluster load signal.  Summing ``busy_count()`` and
+        ``waiting_count()`` from outside tears: a release between the two
+        reads double-counts (the instance already idle, the waiter not
+        yet woken) and routing chases phantom load."""
+        with self._cond:
+            return (len(self._instances) - len(self._idle)) + self._waiting
+
+    def idle_capacity(self) -> int:
+        """Immediately-usable headroom (idle instances + unprovisioned
+        slots) under one lock acquisition — the cross-shard freshen
+        placement signal.  The former read (``stats()`` then
+        ``config.max_instances`` separately) could tear across a
+        concurrent reconfigure."""
+        with self._cond:
+            return len(self._idle) + max(
+                0, self.config.max_instances - len(self._instances))
+
     # -- lifecycle ------------------------------------------------------
     def _keep_alive_for(self, level: WarmthLevel) -> float:
         """The idle limit for one warmth rung (graded mode); per-level
@@ -342,7 +407,7 @@ class InstancePool:
             for inst in dead:
                 inst.state = InstanceState.REAPED
                 del self._instances[inst.instance_id]
-            self.reaped += len(dead)
+            self._c_reaped.inc(len(dead))
         self._fold_and_close(dead, join_timeout=0.0)
         return len(dead)
 
@@ -370,7 +435,7 @@ class InstancePool:
             for inst in dead:
                 inst.state = InstanceState.REAPED
                 del self._instances[inst.instance_id]
-            self.reaped += len(dead)
+            self._c_reaped.inc(len(dead))
         self._fold_and_close(dead, join_timeout=0.0)
         failed: List[PooledInstance] = []
         for inst in demote:
@@ -389,7 +454,7 @@ class InstancePool:
                     # re-enter at the *cold* end of the LIFO stack: a
                     # freshly demoted instance should be the last reused
                     self._idle.insert(0, inst)
-                    self.demotions += 1
+                    self._c_demotions.inc()
                     self._cond.notify()
         if failed:
             with self._cond:
@@ -397,7 +462,7 @@ class InstancePool:
                     if inst.instance_id in self._instances:
                         inst.state = InstanceState.REAPED
                         del self._instances[inst.instance_id]
-                        self.dead_evictions += 1
+                        self._c_dead.inc()
                         self._cond.notify()
             self._fold_and_close(failed, join_timeout=0.0)
         return len(dead) + len(failed)
@@ -452,7 +517,7 @@ class InstancePool:
             for inst in dead:
                 inst.state = InstanceState.REAPED
                 del self._instances[inst.instance_id]
-            self.reaped += len(dead)
+            self._c_reaped.inc(len(dead))
         self._fold_and_close(dead, join_timeout=5.0)
         if self._template is not None:
             self._template.close()
@@ -526,7 +591,7 @@ class InstancePool:
                                 # as a dead HOT worker
                                 inst.state = InstanceState.REAPED
                                 del self._instances[inst.instance_id]
-                                self.dead_evictions += 1
+                                self._c_dead.inc()
                                 doomed.append(inst)
                                 continue
                             break
@@ -549,20 +614,22 @@ class InstancePool:
                 inst.state = InstanceState.BUSY
                 cold = not inst.runtime.initialized
                 if cold:
-                    self.cold_starts += 1
+                    self._c_cold.inc()
                     if inst.runtime.warmth > WarmthLevel.COLD:
                         # landing on a PROCESS standby: the sandbox share
                         # is already paid, only the init share remains
-                        self.partial_cold_starts += 1
+                        self._c_partial.inc()
                 else:
-                    self.warm_acquires += 1
+                    self._c_warm.inc()
                 if waited:
-                    self.queued_acquires += 1
+                    self._c_queued.inc()
         finally:
             # close corpses outside the lock: stats/close on a dead
             # channel backend must never stall other acquires
             self._fold_and_close(doomed, join_timeout=0.0)
-        return inst, time.monotonic() - t0, cold
+        queue_delay = time.monotonic() - t0
+        self._h_queue_delay.observe(queue_delay)
+        return inst, queue_delay, cold
 
     def evict(self, inst: PooledInstance) -> bool:
         """Evict one instance the caller knows is unusable (its backend
@@ -576,7 +643,7 @@ class InstancePool:
                 self._idle.remove(inst)
             inst.state = InstanceState.REAPED
             del self._instances[inst.instance_id]
-            self.dead_evictions += 1
+            self._c_dead.inc()
             self._cond.notify()       # capacity freed: a waiter may scale up
         self._fold_and_close([inst], join_timeout=0.0)
         return True
@@ -594,9 +661,9 @@ class InstancePool:
                 inst.state = InstanceState.REAPED
                 del self._instances[inst.instance_id]
                 if dead and not self._retired:
-                    self.dead_evictions += 1
+                    self._c_dead.inc()
                 else:
-                    self.reaped += 1
+                    self._c_reaped.inc()
                 self._cond.notify()   # capacity freed: a waiter may scale up
             else:
                 inst.state = InstanceState.IDLE
@@ -666,7 +733,7 @@ class InstancePool:
             if not targets and provision and \
                     len(self._instances) < self.config.max_instances:
                 inst = self._create_locked()   # stays IDLE and acquirable
-                self.prewarm_provisioned += 1
+                self._c_provisioned.inc()
                 self._cond.notify()
                 targets = [inst]
             if not targets and level >= WarmthLevel.HOT \
@@ -675,7 +742,7 @@ class InstancePool:
                         if i.state is InstanceState.BUSY]
                 busy.sort(key=lambda i: i.last_used, reverse=True)
                 targets = busy[:max_dispatch]
-            self.prewarm_dispatches += len(targets)
+            self._c_prewarms.inc(len(targets))
             now = self.clock()
             for inst in targets:
                 # predicted traffic counts as activity: keep-alive must not

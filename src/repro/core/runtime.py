@@ -163,10 +163,15 @@ class Runtime:
         concurrent promotions serialize on the same locks they always
         did."""
         level = WarmthLevel(level)
-        with self._init_lock:
-            self._promote_locked(min(level, WarmthLevel.INITIALIZED))
-        if level >= WarmthLevel.HOT and self.warmth < WarmthLevel.HOT:
-            self.freshen(blocking=True)
+        if self.warmth >= level:
+            return
+        from repro.telemetry import NULL_SPAN, current_span
+        span = current_span() or NULL_SPAN
+        with span.phase("warm_to", target=level.label):
+            with self._init_lock:
+                self._promote_locked(min(level, WarmthLevel.INITIALIZED))
+            if level >= WarmthLevel.HOT and self.warmth < WarmthLevel.HOT:
+                self.freshen(blocking=True)
 
     def warm_async(self, level: WarmthLevel) -> Optional[threading.Thread]:
         """Non-blocking ``warm_to``: promotion runs in a background thread
@@ -200,16 +205,24 @@ class Runtime:
     def _promote_locked(self, target: WarmthLevel) -> None:
         if self.warmth >= target:
             return
+        # boot shares are attached to the invocation that triggered them:
+        # current_span() resolves the thread-locally active span (run
+        # path); background prewarm threads see the no-op null span
+        from repro.telemetry import NULL_SPAN, current_span
+        span = current_span() or NULL_SPAN
         try:
             if self.warmth < WarmthLevel.PROCESS:
                 t0 = self.clock()
-                self.backend.boot_process(self)
+                with span.phase("boot_process", backend=type(self.backend)
+                                .__name__):
+                    self.backend.boot_process(self)
                 self.process_seconds = self.clock() - t0
                 self.warmth = WarmthLevel.PROCESS
             if target >= WarmthLevel.INITIALIZED \
                     and self.warmth < WarmthLevel.INITIALIZED:
                 t0 = self.clock()
-                self.backend.boot_init(self)
+                with span.phase("boot_init"):
+                    self.backend.boot_init(self)
                 self.init_step_seconds = self.clock() - t0
                 self.warmth = WarmthLevel.INITIALIZED
                 self.init_seconds = (self.process_seconds

@@ -36,6 +36,7 @@ from repro.core.backend import make_backend
 from repro.core.pool import InstancePool, PoolConfig
 from repro.core.prediction import HybridPredictor, Prediction
 from repro.core.runtime import FunctionSpec, Runtime, WarmthLevel
+from repro.telemetry import MetricsRegistry, NULL_TRACER, Tracer
 
 
 @dataclass
@@ -108,10 +109,24 @@ class FreshenScheduler:
                  pool_config: Optional[PoolConfig] = None,
                  max_router_threads: int = 16,
                  event_window: int = 4096,
-                 warmth_policy: Optional["WarmthPolicy"] = None):
+                 warmth_policy: Optional["WarmthPolicy"] = None,
+                 tracer: Optional[Tracer] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         self.predictor = predictor or HybridPredictor()
         self.accountant = accountant or Accountant()
         self.pool_config = pool_config or PoolConfig()
+        # telemetry: NULL_TRACER keeps every span call a constant-cost
+        # no-op; a cluster passes one shared tracer to all shards so
+        # cross-shard freshens and the arrivals they anchor meet in one
+        # pending table
+        self.tracer = tracer or NULL_TRACER
+        self.metrics = metrics or MetricsRegistry("scheduler.")
+        self._m_dispatched = self.metrics.counter("freshen.dispatched")
+        self._m_gated = self.metrics.counter("freshen.gated")
+        self._m_no_target = self.metrics.counter("freshen.no_target")
+        self._m_routed = self.metrics.counter("freshen.routed")
+        self._m_e2e = self.metrics.histogram("invoke.e2e_seconds")
+        self._m_queue = self.metrics.histogram("invoke.queue_delay_seconds")
         # None = binary warmth (every prewarm targets HOT — seed behavior);
         # a WarmthPolicy makes prewarm depth confidence-driven
         self.warmth_policy = warmth_policy
@@ -226,6 +241,9 @@ class FreshenScheduler:
         if not _routed and self.freshen_route is not None:
             routed = self.freshen_route(pred)
             if routed is not None:
+                # the target shard's scheduler traced the dispatch (the
+                # fabric shares one tracer); count the routing hop here
+                self._m_routed.inc()
                 self.events.append(FreshenEvent(
                     pred.fn, pred.probability, bool(routed),
                     "routed-cross-shard" if routed
@@ -233,12 +251,16 @@ class FreshenScheduler:
                 return bool(routed)
         pool = self.pools.get(pred.fn)
         if pool is None:
+            self._m_no_target.inc()
             self.events.append(FreshenEvent(pred.fn, pred.probability, False,
                                             "no-runtime"))
             return False
         app = pool.spec.app
         level = (WarmthLevel.HOT if self.warmth_policy is None
                  else self.warmth_policy.target_level(pred.probability))
+        fspan = self.tracer.freshen(
+            pred.fn, confidence=pred.probability, level=level.label,
+            expected_delay=pred.expected_delay)
         if not self.accountant.should_freshen(app, pred.probability):
             if (self.warmth_policy is not None
                     and self.warmth_policy.standby_on_gate
@@ -247,18 +269,27 @@ class FreshenScheduler:
                 # a PROCESS-rung standby is the long-tail consolation
                 threads = pool.prewarm_freshen(level=WarmthLevel.PROCESS)
                 if threads:
+                    self._m_dispatched.inc()
+                    fspan.dispatched("standby-process")
                     self.events.append(FreshenEvent(
                         pred.fn, pred.probability, True, "standby-process"))
                     return True
+            self._m_gated.inc()
+            fspan.gated("policy-gated")
             self.events.append(FreshenEvent(pred.fn, pred.probability, False,
                                             "policy-gated"))
             return False
         t0 = time.monotonic()
         threads = pool.prewarm_freshen(level=level)
         if not threads:
+            self._m_no_target.inc()
+            fspan.gated("no-idle-instance")
             self.events.append(FreshenEvent(pred.fn, pred.probability, False,
                                             "no-idle-instance"))
             return False
+        self._m_dispatched.inc()
+        fspan.dispatched("dispatched" if level >= WarmthLevel.HOT
+                         else f"dispatched-{level.label}")
         self.events.append(FreshenEvent(
             pred.fn, pred.probability, True,
             "dispatched" if level >= WarmthLevel.HOT
@@ -271,6 +302,7 @@ class FreshenScheduler:
             def _account():
                 for th in threads:
                     th.join()
+                fspan.dispatch_done()
                 self.accountant.record_freshen(
                     app, pred.fn, time.monotonic() - t0,
                     expected_delay=pred.expected_delay)
@@ -287,24 +319,50 @@ class FreshenScheduler:
 
     # ------------------------------------------------------------------
     def invoke(self, fn: str, args=None, freshen_successors: bool = True,
-               acquire_timeout: Optional[float] = None):
+               acquire_timeout: Optional[float] = None, _span=None):
         """Run fn on a pooled instance with full bookkeeping: predecessor
         prediction, instance acquisition (cold start / queueing), service
-        timing, and latency accounting."""
+        timing, and latency accounting.
+
+        ``_span``: an open ``InvocationSpan`` handed down by an outer
+        layer (``submit`` stamps admission time there; the cluster router
+        opens it around placement).  When absent one is opened here, so
+        direct ``invoke`` callers still trace."""
         pool = self.pools[fn]
-        if freshen_successors:
-            self.on_invocation_start(fn)
-        inst, queue_delay, cold = pool.acquire(timeout=acquire_timeout)
-        t0 = time.monotonic()
+        span = _span if _span is not None else self.tracer.invocation(
+            fn, app=pool.spec.app)
+        if span.enabled and span.submitted_at is not None:
+            # the router-executor hop: admission -> this thread
+            span.phase_from("queue", span.submitted_at)
         try:
-            result = inst.runtime.run(args)
-        finally:
-            pool.release(inst)
+            if freshen_successors:
+                with span.phase("route"):
+                    self.on_invocation_start(fn)
+            with span.phase("acquire"):
+                inst, queue_delay, cold = pool.acquire(
+                    timeout=acquire_timeout)
+            span.annotate(queue_delay=queue_delay, cold=cold)
+            t0 = time.monotonic()
+            try:
+                # activate so Runtime's lazy boot path attaches
+                # boot_process/boot_init phases to this invocation
+                with span.phase("run"), span.active():
+                    result = inst.runtime.run(args)
+            finally:
+                with span.phase("release"):
+                    pool.release(inst)
+        except BaseException as exc:
+            span.finish(error=type(exc).__name__)
+            raise
         # accounting only on success (seed semantics): a raising function
         # body must not be billed, skew latency percentiles, or credit
         # pending freshens as useful
+        service = time.monotonic() - t0
+        self._m_e2e.observe(queue_delay + service)
+        self._m_queue.observe(queue_delay)
+        span.finish()
         self.accountant.record_invocation(
-            pool.spec.app, fn, time.monotonic() - t0,
+            pool.spec.app, fn, service,
             queue_delay=queue_delay, cold_start=cold)
         return result
 
@@ -327,12 +385,19 @@ class FreshenScheduler:
             return self._router
 
     def submit(self, fn: str, args=None, freshen_successors: bool = True,
-               acquire_timeout: Optional[float] = None) -> Future:
+               acquire_timeout: Optional[float] = None,
+               _span=None) -> Future:
         """Admit one invocation concurrently; returns a Future for the
         function result.  Concurrency beyond the pool cap queues inside
         ``InstancePool.acquire`` and is charged as queueing delay."""
+        if _span is None:
+            pool = self.pools.get(fn)
+            _span = self.tracer.invocation(
+                fn, app=pool.spec.app if pool is not None else "default")
+        _span.mark_submitted()
         return self._ensure_router().submit(
-            self.invoke, fn, args, freshen_successors, acquire_timeout)
+            self.invoke, fn, args, freshen_successors, acquire_timeout,
+            _span)
 
     def submit_chain(self, fns: List[str], args=None,
                      freshen: bool = True) -> Future:
@@ -356,3 +421,13 @@ class FreshenScheduler:
         """Pool + freshen counters across every registered function."""
         return {name: {**pool.stats(), **pool.freshen_stats()}
                 for name, pool in self.pools.items()}
+
+    def metrics_snapshot(self) -> dict:
+        """Unified registry dump: the scheduler's own instruments plus
+        every pool's (each registry's prefix — ``scheduler.`` /
+        ``pool.<fn>.`` — is baked into its snapshot keys, so the merge
+        is flat)."""
+        out = dict(self.metrics.snapshot())
+        for pool in list(self.pools.values()):
+            out.update(pool.metrics.snapshot())
+        return out

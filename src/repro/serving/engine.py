@@ -234,9 +234,16 @@ class ServingEngine:
     additional instances cold-start on demand."""
 
     def __init__(self, scheduler=None, router_policy: str = "warmth-aware",
-                 spill_timeout: Optional[float] = None):
+                 spill_timeout: Optional[float] = None,
+                 tracer=None):
         from repro.core.scheduler import FreshenScheduler
-        self.scheduler = scheduler or FreshenScheduler()
+        # one tracer for the whole engine: the base scheduler and (if a
+        # fabric is built) every shard share it, so exported traces show
+        # the full request path regardless of placement
+        self.scheduler = scheduler or FreshenScheduler(tracer=tracer)
+        if tracer is not None and not self.scheduler.tracer.enabled:
+            self.scheduler.tracer = tracer
+        self.tracer = self.scheduler.tracer
         self.endpoints: Dict[str, ModelEndpoint] = {}
         # the sharded fabric (repro.cluster), created lazily by the first
         # deploy(..., shards=N>1); single-scheduler deploys are untouched
@@ -264,7 +271,8 @@ class ServingEngine:
                 shards, policy=self.router_policy,
                 pool_config=self.scheduler.pool_config,
                 predictor=self.scheduler.predictor,
-                spill_timeout=self.spill_timeout)
+                spill_timeout=self.spill_timeout,
+                tracer=self.tracer if self.tracer.enabled else None)
         elif shards > self.cluster.num_shards:
             if not elastic:
                 raise ValueError(
@@ -439,3 +447,12 @@ class ServingEngine:
         if self.cluster is not None:
             stats.update(self.cluster.platform_stats())
         return stats
+
+    def metrics_snapshot(self) -> Dict[str, object]:
+        """Unified typed-metrics dump: the base scheduler's registry plus
+        (when a fabric exists) every shard's, under ``cluster.``."""
+        out = dict(self.scheduler.metrics_snapshot())
+        if self.cluster is not None:
+            for key, val in self.cluster.metrics_snapshot().items():
+                out[f"cluster.{key}"] = val
+        return out

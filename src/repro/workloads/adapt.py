@@ -38,6 +38,7 @@ from typing import Dict, Iterable, List, Optional, Tuple, Union
 
 from repro.core.pool import PoolConfig
 from repro.core.scheduler import FreshenScheduler
+from repro.telemetry import MetricsRegistry
 
 from repro.workloads.history import HistoryPolicy
 
@@ -85,14 +86,17 @@ class AdaptDaemon:
         if cluster is None and not self.schedulers:
             raise ValueError("AdaptDaemon needs schedulers, a cluster, "
                              "or both")
-        self.passes = 0
-        self.adaptations = 0
-        self.reaped_swept = 0                  # instances reaped by the sweep
-        self.demoted_swept = 0                 # warmth rungs dropped by it
-                                               # (graded pools only)
-        self.scale_outs = 0
-        self.scale_ins = 0
-        self.errors = 0                        # step() failures in the loop
+        # the daemon's counters live in its metrics registry; the legacy
+        # attribute names are read-only property views below
+        self.metrics = MetricsRegistry("daemon.")
+        self._c_passes = self.metrics.counter("passes")
+        self._c_adaptations = self.metrics.counter("adaptations")
+        self._c_reaped = self.metrics.counter("reaped_swept")
+        self._c_demoted = self.metrics.counter("demoted_swept")
+        self._c_scale_outs = self.metrics.counter("scale_outs")
+        self._c_scale_ins = self.metrics.counter("scale_ins")
+        self._c_errors = self.metrics.counter("errors")
+        self._c_expired = self.metrics.counter("freshen_spans_expired")
         self.fleet_actions: List[Tuple[int, str, int]] = []
         self._idle_passes = 0
         # windowed cold-rate baselines, seeded from the cluster's current
@@ -109,6 +113,35 @@ class AdaptDaemon:
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self._state_lock = threading.Lock()
+
+    # -- legacy counter views (registry-backed) --------------------------
+    @property
+    def passes(self) -> int:
+        return self._c_passes.value
+
+    @property
+    def adaptations(self) -> int:
+        return self._c_adaptations.value
+
+    @property
+    def reaped_swept(self) -> int:
+        return self._c_reaped.value
+
+    @property
+    def demoted_swept(self) -> int:
+        return self._c_demoted.value
+
+    @property
+    def scale_outs(self) -> int:
+        return self._c_scale_outs.value
+
+    @property
+    def scale_ins(self) -> int:
+        return self._c_scale_ins.value
+
+    @property
+    def errors(self) -> int:
+        return self._c_errors.value
 
     # ------------------------------------------------------------------
     def _live_schedulers(self) -> List[FreshenScheduler]:
@@ -141,8 +174,15 @@ class AdaptDaemon:
         for sched in schedulers:
             for pool in list(sched.pools.values()):
                 before = pool.demotions
-                self.reaped_swept += pool.reap()
-                self.demoted_swept += pool.demotions - before
+                self._c_reaped.inc(pool.reap())
+                self._c_demoted.inc(pool.demotions - before)
+        # expire stale freshen spans on the same traffic-independent tick:
+        # the tracer otherwise only sweeps lazily on export, so a fabric
+        # that goes quiet would hold "pending" anchors forever.  Shards
+        # share one cluster tracer — dedupe by identity.
+        for tracer in {id(s.tracer): s.tracer for s in schedulers
+                       if s.tracer.enabled}.values():
+            self._c_expired.inc(tracer.sweep_expired())
         if self.adapt_pools:
             for idx, sched in enumerate(schedulers):
                 summaries: Dict[str, dict] = {}
@@ -160,8 +200,8 @@ class AdaptDaemon:
                     applied[(idx, fn)] = cfg
         if self.cluster is not None and self.fleet is not None:
             self._fleet_step()
-        self.passes += 1
-        self.adaptations += len(applied)
+        self._c_passes.inc()
+        self._c_adaptations.inc(len(applied))
         return applied
 
     # -- fleet sizing ----------------------------------------------------
@@ -196,7 +236,7 @@ class AdaptDaemon:
                 queue_depth >= fleet.scale_out_queue_depth
                 or cold_rate > fleet.scale_out_cold_rate):
             shard = self.cluster.add_worker().shard_id
-            self.scale_outs += 1
+            self._c_scale_outs.inc()
             self._idle_passes = 0
             self.fleet_actions.append((self.passes, "add", shard))
             return
@@ -207,7 +247,7 @@ class AdaptDaemon:
                 victim = self._scale_in_victim(workers)
                 if victim is not None:
                     self.cluster.remove_worker(victim, drain=True)
-                    self.scale_ins += 1
+                    self._c_scale_ins.inc()
                     self._idle_passes = 0
                     self.fleet_actions.append(
                         (self.passes, "remove", victim))
@@ -236,7 +276,7 @@ class AdaptDaemon:
             except Exception:                  # noqa: BLE001
                 # the loop must survive a transient failure (e.g. a shard
                 # shutting down mid-snapshot); surfaced via self.errors
-                self.errors += 1
+                self._c_errors.inc()
 
     # ------------------------------------------------------------------
     def start(self) -> "AdaptDaemon":

@@ -119,3 +119,39 @@ def test_accuracy_gate_trips_under_periodic_misprediction():
     assert b.useful_freshens == 0
     assert b.mispredicted_freshens == 12
     assert not acc.should_freshen("app", confidence=0.95)   # gate tripped
+
+
+def test_latency_summary_unknown_app_zeroed_and_no_phantom_bill():
+    acc = Accountant()
+    s = acc.latency_summary("never-billed")
+    assert s == {"count": 0, "p50": 0.0, "p95": 0.0, "p99": 0.0,
+                 "max": 0.0, "mean_queue_delay": 0.0,
+                 "max_queue_delay": 0.0, "cold_starts": 0,
+                 "cold_start_rate": 0.0}
+    # reading the summary must not grow the ledger (phantom AppBill)
+    assert acc.apps() == []
+    acc.record_invocation("real", "f", 0.1, now=0.0)
+    acc.latency_summary("still-unknown")
+    assert acc.apps() == ["real"]
+
+
+def test_latency_summary_known_app_counts_and_rate():
+    acc = Accountant()
+    acc.record_invocation("app", "f", 0.2, now=0.0,
+                          queue_delay=0.05, cold_start=True)
+    acc.record_invocation("app", "f", 0.1, now=1.0)
+    s = acc.latency_summary("app")
+    assert s["count"] == 2
+    assert s["cold_starts"] == 1
+    assert s["cold_start_rate"] == pytest.approx(0.5)
+    assert s["max"] == pytest.approx(0.25)
+    assert s["mean_queue_delay"] == pytest.approx(0.025)
+
+
+def test_percentile_clamps_out_of_range_q():
+    from repro.core.accounting import percentile
+    vals = [1.0, 2.0, 3.0, 4.0]
+    assert percentile(vals, 150.0) == 4.0     # q > 100 used to IndexError
+    assert percentile(vals, -5.0) == 1.0
+    assert percentile([], 99.0) == 0.0
+    assert percentile(vals, 50.0) == pytest.approx(2.5)

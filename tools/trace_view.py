@@ -1,0 +1,135 @@
+"""Summarize an exported Chrome trace (stdlib-only, used by CI).
+
+Reads the trace-event JSON that ``Tracer.export_chrome`` writes (schema
+in docs/benchmarks.md "Trace export schema") and prints:
+
+* the top-N slowest invocations with their per-phase time breakdown
+  (phases are re-nested by time containment on the invocation's lane,
+  the same rule chrome://tracing uses);
+* the freshen lifecycle tally (landed / expired / gated) and how many
+  invocations were anchored by a landed prewarm (flow arrows).
+
+Usage:  python tools/trace_view.py trace.json [--top N] [--validate]
+
+``--validate`` is the CI smoke check: exit 0 only when the file parses
+as trace-event JSON and contains at least one *complete* invocation
+span (a closed envelope whose phase children all fall inside it);
+otherwise exit 1 with the reason on stderr.
+"""
+import argparse
+import json
+import sys
+
+
+def load_events(path):
+    with open(path, encoding="utf-8") as f:
+        doc = json.load(f)
+    events = doc["traceEvents"] if isinstance(doc, dict) else doc
+    if not isinstance(events, list):
+        raise ValueError("not a trace-event document")
+    return events
+
+
+def reconstruct(events):
+    """Group phase events under their invocation.  Phases carry their
+    owning span id (``args.span``); when absent (foreign traces) fall
+    back to Chrome's nesting rule — same pid/tid lane, time
+    containment."""
+    invocations = [e for e in events
+                   if e.get("ph") == "X" and e.get("cat") == "invocation"]
+    phases = [e for e in events
+              if e.get("ph") == "X" and e.get("cat") == "phase"]
+    by_span = {}
+    unkeyed = []
+    for p in phases:
+        span = p.get("args", {}).get("span")
+        if span is not None:
+            by_span.setdefault(span, []).append(p)
+        else:
+            unkeyed.append(p)
+    out = []
+    for inv in invocations:
+        inv_id = inv.get("args", {}).get("id")
+        children = list(by_span.get(inv_id, ()))
+        t0, t1 = inv["ts"], inv["ts"] + inv.get("dur", 0.0)
+        children += [p for p in unkeyed
+                     if p.get("tid") == inv.get("tid")
+                     and p["ts"] >= t0 - 1e-6
+                     and p["ts"] + p.get("dur", 0.0) <= t1 + 1e-6]
+        out.append({"event": inv, "phases": children})
+    return out
+
+
+def freshen_tally(events):
+    tally = {"landed": 0, "expired": 0, "gated": 0}
+    for e in events:
+        if e.get("ph") == "X" and e.get("cat") == "freshen":
+            outcome = e.get("args", {}).get("outcome", "pending")
+            tally[outcome] = tally.get(outcome, 0) + 1
+    return tally
+
+
+def summarize(path, top):
+    events = load_events(path)
+    invs = reconstruct(events)
+    anchored = sum(1 for i in invs
+                   if i["event"].get("args", {}).get("linked_freshens"))
+    print(f"{path}: {len(events)} events, {len(invs)} invocations "
+          f"({anchored} anchored by a landed freshen)")
+    tally = freshen_tally(events)
+    flows = sum(1 for e in events if e.get("ph") == "s")
+    print(f"freshen spans: landed={tally['landed']} "
+          f"expired={tally['expired']} gated={tally['gated']} "
+          f"(flow arrows: {flows})")
+    if not invs:
+        return
+    invs.sort(key=lambda i: -i["event"].get("dur", 0.0))
+    print(f"\ntop {min(top, len(invs))} slowest invocations:")
+    for i in invs[:top]:
+        ev = i["event"]
+        parts = {}
+        for p in i["phases"]:
+            parts[p["name"]] = parts.get(p["name"], 0.0) + p.get("dur", 0.0)
+        breakdown = " ".join(f"{k}={v/1e3:.2f}ms" for k, v in
+                             sorted(parts.items(), key=lambda kv: -kv[1]))
+        print(f"  {ev['name']:<24s} {ev.get('dur', 0.0)/1e3:8.2f}ms  "
+              f"{breakdown}")
+
+
+def validate(path):
+    """CI gate: the trace parses and holds >= 1 complete invocation span."""
+    try:
+        events = load_events(path)
+    except Exception as e:
+        print(f"trace_view: {path}: unparseable ({e})", file=sys.stderr)
+        return 1
+    invs = reconstruct(events)
+    complete = [i for i in invs if i["event"].get("dur", 0.0) >= 0.0
+                and i["phases"]]
+    if not complete:
+        print(f"trace_view: {path}: no complete invocation span "
+              f"({len(invs)} invocation events, none with nested phases)",
+              file=sys.stderr)
+        return 1
+    print(f"trace_view: {path}: OK — {len(complete)} complete invocation "
+          f"spans of {len(invs)}")
+    return 0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="Chrome trace-event JSON file")
+    ap.add_argument("--top", type=int, default=10,
+                    help="slowest invocations to show (default 10)")
+    ap.add_argument("--validate", action="store_true",
+                    help="CI mode: exit nonzero unless the trace parses "
+                         "and holds >= 1 complete invocation span")
+    args = ap.parse_args(argv)
+    if args.validate:
+        return validate(args.trace)
+    summarize(args.trace, args.top)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
