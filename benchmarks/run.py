@@ -8,9 +8,9 @@ def main() -> None:
     mods = []
     from benchmarks import (backend_cold_start, chain_e2e, cluster_scale,
                             elastic_shards, fig4_fetch, fig5_warming,
-                            pool_load, prediction_quality, roofline,
-                            router_overhead, table1_triggers, trace_replay,
-                            warmth_levels)
+                            hot_path, pool_load, prediction_quality,
+                            roofline, router_overhead, table1_triggers,
+                            trace_replay, warmth_levels)
     mods = [("table1_triggers", table1_triggers),
             ("fig4_fetch", fig4_fetch),
             ("fig5_warming", fig5_warming),
@@ -23,6 +23,7 @@ def main() -> None:
             ("elastic_shards", elastic_shards),
             ("warmth_levels", warmth_levels),
             ("router_overhead", router_overhead),
+            ("hot_path", hot_path),
             ("roofline", roofline)]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

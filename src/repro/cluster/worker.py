@@ -43,7 +43,8 @@ class ClusterWorker:
                  pool_config: Optional[PoolConfig] = None,
                  devices: Optional[Sequence] = None,
                  max_router_threads: int = 16,
-                 tracer: Optional[Tracer] = None):
+                 tracer: Optional[Tracer] = None,
+                 fast_path: bool = True):
         self.shard_id = shard_id
         self.devices = list(devices) if devices else None
         # set by ClusterRouter.remove_worker: a draining shard finishes
@@ -51,11 +52,14 @@ class ClusterWorker:
         self.draining = False
         # like the predictor, the tracer is cluster-shared: a freshen
         # dispatched on this shard and the arrival it anchored (possibly
-        # routed elsewhere) must meet in one pending table
+        # routed elsewhere) must meet in one pending table.  fast_path
+        # threads the single-submission admission toggle through to the
+        # shard scheduler: a routed warm hit try_acquires inline on the
+        # router's calling thread and pays no admission hop.
         self.scheduler = FreshenScheduler(
             predictor=predictor, accountant=accountant,
             pool_config=pool_config, max_router_threads=max_router_threads,
-            tracer=tracer)
+            tracer=tracer, fast_path=fast_path)
 
     # -- registration ---------------------------------------------------
     def _pinned(self, code):
@@ -140,6 +144,16 @@ class ClusterWorker:
 
     def prewarm(self, fn: str, provision: bool = True, level=None):
         return self.scheduler.prewarm(fn, provision=provision, level=level)
+
+    def try_acquire(self, fn: str):
+        """Non-blocking fast-path probe on this shard's pool: returns
+        ``(instance, cold)`` or None.  ``submit`` already runs this
+        inline via the shard scheduler's fast path; the explicit
+        delegate exists for callers (batchers, probes) that need the
+        grab without the dispatch."""
+        self._check_admitting()
+        pool = self.scheduler.pools.get(fn)
+        return pool.try_acquire() if pool is not None else None
 
     # -- routing signals ------------------------------------------------
     def pool(self, fn: str) -> Optional[InstancePool]:

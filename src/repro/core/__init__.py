@@ -11,8 +11,9 @@ from repro.core.backend import (BackendError, InstanceBackend,  # noqa: F401
 # importing the submodule from the package __init__ would double-execute
 # it under runpy.  Import it from repro.core.backend_template directly.
 from repro.core.cache import FreshenCache  # noqa: F401
-from repro.core.pool import (InstancePool, InstanceState, PoolConfig,  # noqa: F401
-                             PooledInstance, PoolSaturated)
+from repro.core.pool import (AcquireWaiter, InstancePool,  # noqa: F401
+                             InstanceState, PoolConfig, PooledInstance,
+                             PoolSaturated)
 from repro.core.freshen import (Action, FreshenPlan, FreshenState, FrState,  # noqa: F401
                                 PlanEntry)
 from repro.core.network import TIERS, Connection, Tier  # noqa: F401
@@ -21,4 +22,5 @@ from repro.core.prediction import (ChainGraph, HybridPredictor,  # noqa: F401
                                    RecurrencePredictor)
 from repro.core.runtime import (FunctionSpec, RunContext, Runtime,  # noqa: F401
                                 WarmthLevel)
-from repro.core.scheduler import FreshenScheduler, WarmthPolicy  # noqa: F401
+from repro.core.scheduler import (FreshenScheduler, UnknownFunction,  # noqa: F401
+                                  WarmthPolicy)

@@ -27,14 +27,27 @@ off under load.
 
 Thread-safety: all pool state is guarded by one condition variable;
 ``acquire`` blocks (measuring queueing delay) when the pool is saturated.
+
+Two admission modes share that state (event-driven lifecycle control,
+arxiv 2604.05465):
+
+* **Thread-parked** — the legacy blocking ``acquire(timeout)``: the
+  calling thread waits on the condition variable.
+* **Closure-parked** — ``try_acquire()`` grabs an instance without ever
+  blocking, and ``acquire_async(cb, timeout)`` parks a *callback* in an
+  admission-ordered waiter queue when nothing is available.  ``release``
+  hands the freed instance straight to the next parked waiter under the
+  same single lock acquisition (no executor round-trip); waiter timeouts
+  are swept by the ``AdaptDaemon`` tick via ``sweep_waiters``.
 """
 from __future__ import annotations
 
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field, fields, replace
 from enum import Enum
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 from repro.core.backend import make_backend
 from repro.core.runtime import FunctionSpec, Runtime, WarmthLevel
@@ -113,6 +126,56 @@ class PoolSaturated(TimeoutError):
             f"{pool_size}/{max_instances} instances all busy")
 
 
+# AcquireCallback signature: cb(instance, queue_delay_seconds, cold, error).
+# Exactly one of (instance, error) is non-None; the callback fires exactly
+# once, always OUTSIDE the pool lock — from the admitting thread (immediate
+# grant), a releasing thread (direct handoff), or the daemon sweep (timeout).
+AcquireCallback = Callable[
+    [Optional["PooledInstance"], float, bool, Optional[BaseException]], None]
+
+
+@dataclass
+class _AsyncWaiter:
+    """One parked ``acquire_async`` request.  ``enqueued``/``deadline``
+    are ``time.monotonic``-domain (matching blocking ``acquire``'s
+    timeout semantics), NOT the injectable pool clock — waiter timeouts
+    are wall-clock contracts with the caller, not policy time."""
+    cb: AcquireCallback
+    enqueued: float
+    deadline: Optional[float]
+    state: str = "pending"            # pending | served | failed | cancelled
+    error: Optional[BaseException] = None
+
+
+class AcquireWaiter:
+    """Caller-side handle for one parked ``acquire_async`` request."""
+    __slots__ = ("_pool", "_waiter")
+
+    def __init__(self, pool: "InstancePool", waiter: _AsyncWaiter):
+        self._pool = pool
+        self._waiter = waiter
+
+    @property
+    def pending(self) -> bool:
+        with self._pool._cond:
+            return self._waiter.state == "pending"
+
+    def cancel(self) -> bool:
+        """Withdraw the request.  Returns True if it was still parked —
+        the callback will then never fire.  Returns False when the grant
+        or timeout already won the race (the callback fired or is about
+        to)."""
+        with self._pool._cond:
+            if self._waiter.state != "pending":
+                return False
+            self._waiter.state = "cancelled"
+            try:
+                self._pool._async_waiters.remove(self._waiter)
+            except ValueError:
+                pass
+            return True
+
+
 class InstancePool:
     """All instances of one function, plus the scale/keep-alive policy."""
 
@@ -137,6 +200,9 @@ class InstancePool:
         self._idle: List[PooledInstance] = []     # LIFO stack
         self._next_id = 0
         self._waiting = 0
+        # admission-ordered FIFO of closure-parked acquires (acquire_async);
+        # cancelled waiters are removed eagerly, so len() is live demand
+        self._async_waiters: Deque[_AsyncWaiter] = deque()
         self._retired = False         # retire(): released instances close
         # lifecycle counters live in the pool's own metrics registry;
         # the legacy attribute names (``pool.cold_starts`` …) are
@@ -262,7 +328,8 @@ class InstancePool:
             self._instances[inst.instance_id] = inst
             self._idle.append(inst)
             self._cond.notify()
-            return inst
+        self._pump_async()            # the adoptee may serve a parked waiter
+        return inst
 
     @property
     def primary(self) -> Optional[Runtime]:
@@ -335,23 +402,32 @@ class InstancePool:
                        if not i.runtime.freshen_in_flight())
 
     def waiting_count(self) -> int:
-        """Acquires currently blocked waiting for an instance (queue
-        depth) — the load signal cluster routing and rebalancing read."""
+        """Acquires currently waiting for an instance (queue depth) —
+        thread-parked blocking acquires plus closure-parked async
+        waiters.  The load signal cluster routing and rebalancing read."""
         with self._cond:
-            return self._waiting
+            return self._waiting + len(self._async_waiters)
+
+    def async_waiting_count(self) -> int:
+        """Closure-parked waiters only (``acquire_async`` requests not
+        yet granted or timed out) — what a drain must wait out."""
+        with self._cond:
+            return len(self._async_waiters)
 
     def busy_count(self) -> int:
         with self._cond:
             return len(self._instances) - len(self._idle)
 
     def load(self) -> int:
-        """Busy instances + blocked acquires under ONE lock acquisition —
-        the cluster load signal.  Summing ``busy_count()`` and
-        ``waiting_count()`` from outside tears: a release between the two
-        reads double-counts (the instance already idle, the waiter not
-        yet woken) and routing chases phantom load."""
+        """Busy instances + waiting acquires (both parking modes) under
+        ONE lock acquisition — the cluster load signal.  Summing
+        ``busy_count()`` and ``waiting_count()`` from outside tears: a
+        release between the two reads double-counts (the instance
+        already idle, the waiter not yet woken) and routing chases
+        phantom load."""
         with self._cond:
-            return (len(self._instances) - len(self._idle)) + self._waiting
+            return (len(self._instances) - len(self._idle)) \
+                + self._waiting + len(self._async_waiters)
 
     def idle_capacity(self) -> int:
         """Immediately-usable headroom (idle instances + unprovisioned
@@ -465,6 +541,10 @@ class InstancePool:
                         self._c_dead.inc()
                         self._cond.notify()
             self._fold_and_close(failed, join_timeout=0.0)
+        if demote:
+            # demoted instances re-entered the idle list: a parked
+            # waiter may land on one (paying only the missing rungs)
+            self._pump_async()
         return len(dead) + len(failed)
 
     def _fold_and_close(self, dead: List[PooledInstance],
@@ -521,15 +601,28 @@ class InstancePool:
         self._fold_and_close(dead, join_timeout=5.0)
         if self._template is not None:
             self._template.close()
+        # any waiters parked through the close re-provision fresh
+        # instances (the pool stays usable) — no admitted request drops
+        self._pump_async()
 
     def retire(self):
         """``close()`` with no way back: instances released *after* this
         call are closed instead of re-idled.  For pools on a shard that
         left its cluster undrained — a busy instance finishing later
         must not park a subprocess backend worker in an idle list nobody
-        will ever reap."""
+        will ever reap.  Closure-parked waiters are failed with
+        ``PoolSaturated`` (their callbacks see the error — no admitted
+        request silently drops)."""
         with self._cond:
             self._retired = True
+            failed: List[_AsyncWaiter] = []
+            while self._async_waiters:
+                w = self._async_waiters.popleft()
+                if w.state == "pending":
+                    w.state = "failed"
+                    w.error = self._saturated_locked()
+                    failed.append(w)
+        self._dispatch_async([], failed)
         self.close()
 
     def _pop_warmest_locked(self) -> PooledInstance:
@@ -552,18 +645,74 @@ class InstancePool:
                 best_i, best_key = i, key
         return self._idle.pop(best_i)
 
-    def _scale_up_allowed_locked(self) -> bool:
-        """``_waiting`` includes the requester, so with the default depth of
-        1 any arrival that finds no idle instance provisions a new one."""
+    def _scale_up_allowed_locked(self, extra_waiters: int = 0) -> bool:
+        """Demand counts thread-parked acquires (``_waiting`` includes a
+        blocked requester), closure-parked async waiters, and
+        ``extra_waiters`` for a requester not represented in either (a
+        ``try_acquire``/``acquire_async`` caller probing before parking)
+        — so with the default depth of 1 any arrival that finds no idle
+        instance provisions a new one."""
         if len(self._instances) >= self.config.max_instances:
             return False
         if not self._instances:
             return True                       # from zero: always start one
-        return self._waiting >= self.config.scale_up_queue_depth
+        demand = self._waiting + len(self._async_waiters) + extra_waiters
+        return demand >= self.config.scale_up_queue_depth
+
+    def _saturated_locked(self) -> PoolSaturated:
+        return PoolSaturated(
+            self.spec.name,
+            queue_depth=self._waiting + len(self._async_waiters),
+            pool_size=len(self._instances),
+            max_instances=self.config.max_instances,
+            shard=self.shard)
+
+    def _try_take_locked(self, doomed: List[PooledInstance],
+                         extra_waiters: int = 0
+                         ) -> Optional[PooledInstance]:
+        """One non-blocking grab attempt: pop the warmest *healthy* idle
+        instance (corpses are evicted into ``doomed`` for the caller to
+        fold outside the lock — dropping one shrinks the pool, so the
+        same call may then scale up fresh instead of failing), else
+        provision when allowed.  Returns None when saturated."""
+        while self._idle:
+            inst = self._pop_warmest_locked()
+            if not inst.runtime.healthy():
+                # any provisioned rung can die under us — a PROCESS
+                # standby corpse is as unusable as a dead HOT worker
+                inst.state = InstanceState.REAPED
+                del self._instances[inst.instance_id]
+                self._c_dead.inc()
+                doomed.append(inst)
+                continue
+            return inst
+        if self._scale_up_allowed_locked(extra_waiters):
+            inst = self._create_locked()
+            self._idle.remove(inst)
+            return inst
+        return None
+
+    def _mark_acquired_locked(self, inst: PooledInstance,
+                              waited: bool) -> bool:
+        """Transition a just-granted instance to BUSY and account the
+        acquire; returns the cold-start flag."""
+        inst.state = InstanceState.BUSY
+        cold = not inst.runtime.initialized
+        if cold:
+            self._c_cold.inc()
+            if inst.runtime.warmth > WarmthLevel.COLD:
+                # landing on a PROCESS standby: the sandbox share is
+                # already paid, only the init share remains
+                self._c_partial.inc()
+        else:
+            self._c_warm.inc()
+        if waited:
+            self._c_queued.inc()
+        return cold
 
     def acquire(self, timeout: Optional[float] = None
                 ) -> Tuple[PooledInstance, float, bool]:
-        """Claim an instance for one invocation.
+        """Claim an instance for one invocation (thread-parked mode).
 
         Returns ``(instance, queue_delay_seconds, cold_start)``.  Prefers
         the most recently used idle instance (LIFO — the one a prewarm
@@ -583,46 +732,18 @@ class InstancePool:
                 self._waiting += 1
                 try:
                     while True:
-                        if self._idle:
-                            inst = self._pop_warmest_locked()
-                            if not inst.runtime.healthy():
-                                # any provisioned rung can die under us —
-                                # a PROCESS standby corpse is as unusable
-                                # as a dead HOT worker
-                                inst.state = InstanceState.REAPED
-                                del self._instances[inst.instance_id]
-                                self._c_dead.inc()
-                                doomed.append(inst)
-                                continue
-                            break
-                        if self._scale_up_allowed_locked():
-                            inst = self._create_locked()
-                            self._idle.remove(inst)
+                        inst = self._try_take_locked(doomed)
+                        if inst is not None:
                             break
                         remaining = (None if timeout is None
                                      else timeout - (time.monotonic() - t0))
                         if remaining is not None and remaining <= 0:
-                            raise PoolSaturated(
-                                self.spec.name, queue_depth=self._waiting,
-                                pool_size=len(self._instances),
-                                max_instances=self.config.max_instances,
-                                shard=self.shard)
+                            raise self._saturated_locked()
                         waited = True
                         self._cond.wait(remaining)
                 finally:
                     self._waiting -= 1
-                inst.state = InstanceState.BUSY
-                cold = not inst.runtime.initialized
-                if cold:
-                    self._c_cold.inc()
-                    if inst.runtime.warmth > WarmthLevel.COLD:
-                        # landing on a PROCESS standby: the sandbox share
-                        # is already paid, only the init share remains
-                        self._c_partial.inc()
-                else:
-                    self._c_warm.inc()
-                if waited:
-                    self._c_queued.inc()
+                cold = self._mark_acquired_locked(inst, waited)
         finally:
             # close corpses outside the lock: stats/close on a dead
             # channel backend must never stall other acquires
@@ -630,6 +751,166 @@ class InstancePool:
         queue_delay = time.monotonic() - t0
         self._h_queue_delay.observe(queue_delay)
         return inst, queue_delay, cold
+
+    def try_acquire(self) -> Optional[Tuple[PooledInstance, bool]]:
+        """Non-blocking acquire — the single-submission fast path.
+
+        Returns ``(instance, cold_start)`` when an idle instance (or an
+        allowed scale-up slot) is immediately available, else None: the
+        caller then falls back to ``acquire``/``acquire_async``.  Never
+        jumps the queue: while async waiters are parked, callers get
+        None so admission order holds.  Runs the same opportunistic
+        keep-alive reap as blocking ``acquire`` — the fast path must
+        not hand out an instance whose keep-alive already expired (a
+        daemon tick may not have swept it yet), or lifecycle policy
+        would silently depend on the admission mode."""
+        self.reap()
+        doomed: List[PooledInstance] = []
+        try:
+            with self._cond:
+                if self._async_waiters or self._retired:
+                    return None
+                inst = self._try_take_locked(doomed, extra_waiters=1)
+                if inst is None:
+                    return None
+                cold = self._mark_acquired_locked(inst, waited=False)
+        finally:
+            self._fold_and_close(doomed, join_timeout=0.0)
+        self._h_queue_delay.observe(0.0)
+        return inst, cold
+
+    def acquire_async(self, cb: AcquireCallback,
+                      timeout: Optional[float] = None) -> AcquireWaiter:
+        """Closure-parked acquire: park a callback, not a thread.
+
+        When an instance is immediately available the callback fires
+        synchronously on the calling thread (still outside the pool
+        lock).  Otherwise the request joins an admission-ordered FIFO;
+        ``release`` hands freed instances directly to the head waiter,
+        and ``sweep_waiters`` (driven by the ``AdaptDaemon`` tick) fails
+        expired waiters with ``PoolSaturated``.  The callback fires
+        exactly once — ``cb(instance, queue_delay, cold, error)`` — or
+        never, if the returned handle is cancelled first.  Like
+        ``acquire``/``try_acquire``, the immediate-grant probe reaps
+        expired idle instances first, so admission mode never changes
+        keep-alive semantics."""
+        self.reap()
+        t0 = time.monotonic()
+        deadline = None if timeout is None else t0 + timeout
+        waiter = _AsyncWaiter(cb=cb, enqueued=t0, deadline=deadline)
+        doomed: List[PooledInstance] = []
+        inst = None
+        cold = False
+        with self._cond:
+            if self._retired:
+                waiter.state = "failed"
+                waiter.error = self._saturated_locked()
+            elif not self._async_waiters:
+                inst = self._try_take_locked(doomed, extra_waiters=1)
+                if inst is not None:
+                    waiter.state = "served"
+                    cold = self._mark_acquired_locked(inst, waited=False)
+            if waiter.state == "pending":
+                self._async_waiters.append(waiter)
+        self._fold_and_close(doomed, join_timeout=0.0)
+        if waiter.state == "served":
+            queue_delay = time.monotonic() - t0
+            self._h_queue_delay.observe(queue_delay)
+            self._fire_cb(waiter, inst, queue_delay, cold, None)
+        elif waiter.state == "failed":
+            self._fire_cb(waiter, None, time.monotonic() - t0, False,
+                          waiter.error)
+        return AcquireWaiter(self, waiter)
+
+    def _fire_cb(self, waiter: _AsyncWaiter, inst: Optional[PooledInstance],
+                 queue_delay: float, cold: bool,
+                 error: Optional[BaseException]):
+        """Run one waiter callback, swallowing its exceptions: a raising
+        callback must never break the releasing thread's path (it would
+        leak the *next* release's handoff)."""
+        try:
+            waiter.cb(inst, queue_delay, cold, error)
+        except Exception:
+            pass
+
+    def _serve_async_locked(self, doomed: List[PooledInstance]
+                            ) -> Tuple[List, List]:
+        """Match parked waiters with available capacity, in admission
+        order.  Expired waiters encountered at the head are failed
+        rather than served.  Returns ``(grants, expired)`` for
+        ``_dispatch_async`` to fire outside the lock."""
+        grants: List[Tuple[_AsyncWaiter, PooledInstance, bool]] = []
+        expired: List[_AsyncWaiter] = []
+        now = time.monotonic()
+        while self._async_waiters:
+            w = self._async_waiters[0]
+            if w.state != "pending":          # defensive: cancel races
+                self._async_waiters.popleft()
+                continue
+            if w.deadline is not None and now >= w.deadline:
+                self._async_waiters.popleft()
+                w.state = "failed"
+                w.error = self._saturated_locked()
+                expired.append(w)
+                continue
+            # the waiter itself is still in the deque, so demand already
+            # counts it — no extra_waiters
+            inst = self._try_take_locked(doomed)
+            if inst is None:
+                break
+            self._async_waiters.popleft()
+            w.state = "served"
+            cold = self._mark_acquired_locked(inst, waited=True)
+            grants.append((w, inst, cold))
+        return grants, expired
+
+    def _dispatch_async(self, grants: List, expired: List):
+        """Fire grant/expiry callbacks collected under the lock."""
+        now = time.monotonic()
+        for w, inst, cold in grants:
+            queue_delay = now - w.enqueued
+            self._h_queue_delay.observe(queue_delay)
+            self._fire_cb(w, inst, queue_delay, cold, None)
+        for w in expired:
+            self._fire_cb(w, None, now - w.enqueued, False, w.error)
+
+    def _pump_async(self):
+        """Serve parked waiters after capacity may have appeared
+        (eviction, adoption, reconfigure, demotion re-idle).  Release
+        integrates the same serve inline under its own lock hold."""
+        doomed: List[PooledInstance] = []
+        with self._cond:
+            grants, expired = self._serve_async_locked(doomed)
+        self._fold_and_close(doomed, join_timeout=0.0)
+        self._dispatch_async(grants, expired)
+
+    def sweep_waiters(self, now: Optional[float] = None) -> int:
+        """Fail closure-parked waiters past their deadline with
+        ``PoolSaturated`` and opportunistically serve any that capacity
+        has appeared for (self-healing against a missed pump).  Driven
+        by the ``AdaptDaemon`` tick — the async analogue of the blocking
+        ``acquire``'s own timeout bookkeeping.  ``now`` is in the
+        ``time.monotonic`` domain (waiter deadlines are wall-clock
+        contracts, not pool-clock policy time)."""
+        now = time.monotonic() if now is None else now
+        expired: List[_AsyncWaiter] = []
+        doomed: List[PooledInstance] = []
+        with self._cond:
+            keep: Deque[_AsyncWaiter] = deque()
+            for w in self._async_waiters:
+                if w.state == "pending" and w.deadline is not None \
+                        and now >= w.deadline:
+                    w.state = "failed"
+                    w.error = self._saturated_locked()
+                    expired.append(w)
+                elif w.state == "pending":
+                    keep.append(w)
+            self._async_waiters = keep
+            grants, late = self._serve_async_locked(doomed)
+            expired.extend(late)
+        self._fold_and_close(doomed, join_timeout=0.0)
+        self._dispatch_async(grants, expired)
+        return len(expired)
 
     def evict(self, inst: PooledInstance) -> bool:
         """Evict one instance the caller knows is unusable (its backend
@@ -646,6 +927,7 @@ class InstancePool:
             self._c_dead.inc()
             self._cond.notify()       # capacity freed: a waiter may scale up
         self._fold_and_close([inst], join_timeout=0.0)
+        self._pump_async()            # freed capacity may admit a waiter
         return True
 
     def release(self, inst: PooledInstance):
@@ -653,6 +935,9 @@ class InstancePool:
         # dead substrate is evicted instead of re-idled, so no later
         # acquire lands on a corpse and waits out keep-alive
         dead = not inst.runtime.healthy()
+        doomed: List[PooledInstance] = []
+        grants: List = []
+        expired: List = []
         with self._cond:
             if inst.state is InstanceState.REAPED:
                 return
@@ -669,10 +954,20 @@ class InstancePool:
                 inst.state = InstanceState.IDLE
                 inst.last_used = self.clock()
                 self._idle.append(inst)
+                # direct handoff: serve the parked waiter queue under
+                # THIS lock hold — the freed instance reaches the next
+                # closure-parked request without an executor round-trip
+                grants, expired = self._serve_async_locked(doomed)
                 self._cond.notify()
             closing = self._retired or dead
         if closing:
             self._fold_and_close([inst], join_timeout=0.0)
+        self._fold_and_close(doomed, join_timeout=0.0)
+        self._dispatch_async(grants, expired)
+        if dead and not self._retired:
+            # the corpse's slot is free again: a parked waiter may now
+            # scale up a fresh instance
+            self._pump_async()
 
     def reconfigure(self, config: PoolConfig) -> PoolConfig:
         """Swap the pool's sizing/lifecycle policy live; returns the old
@@ -688,6 +983,7 @@ class InstancePool:
             for f in fields(PoolConfig):
                 setattr(self.config, f.name, getattr(config, f.name))
             self._cond.notify_all()
+        self._pump_async()        # a raised cap may admit parked waiters
         return old
 
     # -- prewarm-aware freshen dispatch --------------------------------
@@ -753,6 +1049,9 @@ class InstancePool:
                 th = inst.runtime.warm_async(level)
                 if th is not None:
                     threads.append(th)
+        # a provisioned prewarm instance is idle capacity; real traffic
+        # parked in the waiter queue outranks the prediction that bought it
+        self._pump_async()
         return threads
 
     # -- introspection --------------------------------------------------
@@ -820,7 +1119,8 @@ class InstancePool:
             out = {
                 "instances": len(self._instances),
                 "idle": len(self._idle),
-                "waiting": self._waiting,
+                "waiting": self._waiting + len(self._async_waiters),
+                "async_waiting": len(self._async_waiters),
                 "cold_starts": self.cold_starts,
                 "warm_acquires": self.warm_acquires,
                 "queued_acquires": self.queued_acquires,

@@ -10,8 +10,22 @@ backed by an ``InstancePool`` (repro.core.pool):
 * ``invoke``  — acquire an instance (possibly cold-starting or queueing),
   run, release; queueing delay and cold starts are reported to the
   Accountant alongside service time.
-* ``submit`` / ``submit_chain`` — admit invocations concurrently through a
-  thread-pool router; returns a Future.
+* ``submit`` / ``submit_chain`` — admit invocations concurrently; returns
+  a Future.  ``submit`` is a *single-submission fast path*: it calls
+  ``InstancePool.try_acquire`` inline on the caller thread and, on a warm
+  hit, hands only the run-and-release tail to the router executor — one
+  hop, ``queue`` phase ≈ the executor handoff.  When nothing is
+  immediately available the request parks a **closure** in the pool's
+  ``acquire_async`` waiter queue (no router thread blocks on the
+  condition variable); ``release`` hands the freed instance straight to
+  it.  Freshen prediction (``on_invocation_start``) runs on a dedicated
+  single-worker executor off the critical path — observation order is
+  preserved (FIFO), admission latency stops paying for it.  Constructing
+  the scheduler with ``fast_path=False`` restores the PR 8 two-hop
+  admission (the measured baseline in ``benchmarks/hot_path.py``).
+* ``submit`` on an unregistered function raises ``UnknownFunction`` at
+  admission time (synchronously) rather than surfacing a bare KeyError
+  later inside the Future.
 * freshen dispatch targets *idle pooled instances* (prewarm-aware): the
   §3.1 hook becomes a pool policy, and with ``PoolConfig.prewarm_provision``
   it proactively cold-starts an instance off the critical path —
@@ -37,6 +51,23 @@ from repro.core.pool import InstancePool, PoolConfig
 from repro.core.prediction import HybridPredictor, Prediction
 from repro.core.runtime import FunctionSpec, Runtime, WarmthLevel
 from repro.telemetry import MetricsRegistry, NULL_TRACER, Tracer
+
+
+class UnknownFunction(KeyError):
+    """``submit``/``invoke``/``submit_chain`` named a function that was
+    never ``register``-ed with this scheduler.  Raised synchronously at
+    admission time — the caller holds a programming error, not a
+    capacity problem, so it must not surface later inside a Future the
+    way a bare KeyError from the pool lookup used to.  (The cluster
+    router already rejects unknowns at route time.)"""
+
+    def __init__(self, fn: str):
+        self.fn = fn
+        super().__init__(fn)
+
+    def __str__(self) -> str:
+        return (f"function {self.fn!r} is not registered with this "
+                f"scheduler (call register() first)")
 
 
 @dataclass
@@ -111,7 +142,8 @@ class FreshenScheduler:
                  event_window: int = 4096,
                  warmth_policy: Optional["WarmthPolicy"] = None,
                  tracer: Optional[Tracer] = None,
-                 metrics: Optional[MetricsRegistry] = None):
+                 metrics: Optional[MetricsRegistry] = None,
+                 fast_path: bool = True):
         self.predictor = predictor or HybridPredictor()
         self.accountant = accountant or Accountant()
         self.pool_config = pool_config or PoolConfig()
@@ -127,6 +159,11 @@ class FreshenScheduler:
         self._m_routed = self.metrics.counter("freshen.routed")
         self._m_e2e = self.metrics.histogram("invoke.e2e_seconds")
         self._m_queue = self.metrics.histogram("invoke.queue_delay_seconds")
+        # admission-path split: fast = inline try_acquire hit (run-only
+        # work dispatched), slow = parked in the pool's waiter queue or
+        # fell back to a blocking acquire (spill/legacy path)
+        self._m_fast = self.metrics.counter("invoke.fast_path")
+        self._m_slow = self.metrics.counter("invoke.slow_path")
         # None = binary warmth (every prewarm targets HOT — seed behavior);
         # a WarmthPolicy makes prewarm depth confidence-driven
         self.warmth_policy = warmth_policy
@@ -148,6 +185,15 @@ class FreshenScheduler:
         self._scopes: Dict[str, tuple] = {}      # chain-level shared scopes
         self._lock = threading.Lock()
         self._router: Optional[ThreadPoolExecutor] = None
+        # single-submission fast path toggle: False restores the PR 8
+        # two-hop admission (every submit routed through invoke) — the
+        # legacy arm benchmarks/hot_path.py measures against
+        self.fast_path = fast_path
+        # freshen prediction off the critical path: one worker, so
+        # predictor.observe keeps its arrival order (the Markov chain
+        # detector is order-sensitive) while admission stops paying for
+        # prediction + prewarm dispatch
+        self._freshen_exec: Optional[ThreadPoolExecutor] = None
 
     # ------------------------------------------------------------------
     def register(self, spec: FunctionSpec, runtime: Optional[Runtime] = None,
@@ -211,6 +257,12 @@ class FreshenScheduler:
 
     def pool(self, fn: str) -> InstancePool:
         return self.pools[fn]
+
+    def _pool_or_raise(self, fn: str) -> InstancePool:
+        pool = self.pools.get(fn)
+        if pool is None:
+            raise UnknownFunction(fn)
+        return pool
 
     def apply_pool_config(self, fn: str, config: PoolConfig) -> PoolConfig:
         """Live-retune one function's pool (the trace/history-adaptive
@@ -310,12 +362,32 @@ class FreshenScheduler:
             threading.Thread(target=_account, daemon=True).start()
         return True
 
-    def on_invocation_start(self, fn: str):
+    def on_invocation_start(self, fn: str, now: Optional[float] = None):
         """Called when fn begins: the best moment to freshen successors —
-        the successor will not start until fn finishes + trigger delay."""
-        self.predictor.observe(fn, time.monotonic())
+        the successor will not start until fn finishes + trigger delay.
+        ``now`` lets the fast path stamp the *admission* time even though
+        this runs later on the freshen executor (prediction inter-arrival
+        statistics must not absorb executor lag)."""
+        self.predictor.observe(fn, time.monotonic() if now is None else now)
         for pred in self.predictor.successors(fn):
             self._dispatch_freshen(pred)
+
+    def _ensure_freshen_exec(self) -> ThreadPoolExecutor:
+        with self._lock:
+            if self._freshen_exec is None:
+                self._freshen_exec = ThreadPoolExecutor(
+                    max_workers=1, thread_name_prefix="freshen-predict")
+            return self._freshen_exec
+
+    def _freshen_async(self, fn: str):
+        """Queue prediction + prewarm dispatch for ``fn``'s admission on
+        the dedicated freshen executor — off the request critical path."""
+        now = time.monotonic()
+        try:
+            self._ensure_freshen_exec().submit(
+                self.on_invocation_start, fn, now)
+        except RuntimeError:
+            pass      # shutting down: predictions are best-effort
 
     # ------------------------------------------------------------------
     def invoke(self, fn: str, args=None, freshen_successors: bool = True,
@@ -328,7 +400,7 @@ class FreshenScheduler:
         layer (``submit`` stamps admission time there; the cluster router
         opens it around placement).  When absent one is opened here, so
         direct ``invoke`` callers still trace."""
-        pool = self.pools[fn]
+        pool = self._pool_or_raise(fn)
         span = _span if _span is not None else self.tracer.invocation(
             fn, app=pool.spec.app)
         if span.enabled and span.submitted_at is not None:
@@ -366,6 +438,36 @@ class FreshenScheduler:
             queue_delay=queue_delay, cold_start=cold)
         return result
 
+    def _run_acquired(self, fn: str, pool: InstancePool, inst, args,
+                      span, queue_delay: float, cold: bool):
+        """Run-and-release tail of an admission whose acquire already
+        happened (fast-path ``try_acquire`` hit or ``acquire_async``
+        grant).  Same bookkeeping contract as ``invoke``: accounting on
+        success only, span finished on every path."""
+        if span.enabled and span.submitted_at is not None:
+            # admission -> this thread: the only hop the fast path pays
+            span.phase_from("queue", span.submitted_at)
+        span.annotate(queue_delay=queue_delay, cold=cold)
+        t0 = time.monotonic()
+        try:
+            try:
+                with span.phase("run"), span.active():
+                    result = inst.runtime.run(args)
+            finally:
+                with span.phase("release"):
+                    pool.release(inst)
+        except BaseException as exc:
+            span.finish(error=type(exc).__name__)
+            raise
+        service = time.monotonic() - t0
+        self._m_e2e.observe(queue_delay + service)
+        self._m_queue.observe(queue_delay)
+        span.finish()
+        self.accountant.record_invocation(
+            pool.spec.app, fn, service,
+            queue_delay=queue_delay, cold_start=cold)
+        return result
+
     def run_chain(self, fns: List[str], args=None,
                   freshen: bool = True):
         """Execute an explicit chain sequentially (orchestration-style)."""
@@ -387,29 +489,130 @@ class FreshenScheduler:
     def submit(self, fn: str, args=None, freshen_successors: bool = True,
                acquire_timeout: Optional[float] = None,
                _span=None) -> Future:
-        """Admit one invocation concurrently; returns a Future for the
-        function result.  Concurrency beyond the pool cap queues inside
-        ``InstancePool.acquire`` and is charged as queueing delay."""
+        """Admit one invocation; returns a Future for the function result.
+
+        Single-submission fast path: ``try_acquire`` runs inline on the
+        caller thread — a warm hit dispatches only the run-and-release
+        tail to the router (one hop, ``invoke.fast_path``).  On a miss
+        (``invoke.slow_path``): with an ``acquire_timeout`` the request
+        takes the legacy blocking-acquire path unchanged, so spill
+        semantics (``PoolSaturated`` surfacing on the Future within the
+        deadline) are exactly the PR 8 behavior; without one it parks a
+        closure in the pool's admission-ordered ``acquire_async`` queue
+        and the next ``release`` hands it the freed instance directly.
+        Raises ``UnknownFunction`` synchronously for an unregistered
+        ``fn``."""
+        pool = self._pool_or_raise(fn)
         if _span is None:
-            pool = self.pools.get(fn)
-            _span = self.tracer.invocation(
-                fn, app=pool.spec.app if pool is not None else "default")
+            _span = self.tracer.invocation(fn, app=pool.spec.app)
+        if not self.fast_path:
+            _span.mark_submitted()
+            return self._ensure_router().submit(
+                self.invoke, fn, args, freshen_successors, acquire_timeout,
+                _span)
+        with _span.phase("acquire"):
+            grabbed = pool.try_acquire()
         _span.mark_submitted()
-        return self._ensure_router().submit(
-            self.invoke, fn, args, freshen_successors, acquire_timeout,
-            _span)
+        if grabbed is not None:
+            inst, cold = grabbed
+            self._m_fast.inc()
+            if freshen_successors:
+                self._freshen_async(fn)
+            return self._ensure_router().submit(
+                self._run_acquired, fn, pool, inst, args, _span, 0.0, cold)
+        self._m_slow.inc()
+        if acquire_timeout is not None:
+            # spill path unchanged: blocking acquire with a deadline in a
+            # router thread (the cluster's retry chain needs PoolSaturated
+            # raised from the acquire, not a swept waiter)
+            return self._ensure_router().submit(
+                self.invoke, fn, args, freshen_successors, acquire_timeout,
+                _span)
+        if freshen_successors:
+            self._freshen_async(fn)
+        fut: Future = Future()
+        fut.set_running_or_notify_cancel()
+
+        def _granted(inst, queue_delay, cold, error):
+            if error is not None:
+                _span.finish(error=type(error).__name__)
+                fut.set_exception(error)
+                return
+            try:
+                inner = self._ensure_router().submit(
+                    self._run_acquired, fn, pool, inst, args, _span,
+                    queue_delay, cold)
+            except BaseException as exc:
+                # router rejected the tail (shutdown race): put the
+                # instance back and surface the error — never drop an
+                # admitted future
+                pool.release(inst)
+                _span.finish(error=type(exc).__name__)
+                fut.set_exception(exc)
+                return
+            inner.add_done_callback(lambda f: (
+                fut.set_exception(f.exception()) if f.exception() is not None
+                else fut.set_result(f.result())))
+
+        pool.acquire_async(_granted)
+        return fut
 
     def submit_chain(self, fns: List[str], args=None,
                      freshen: bool = True) -> Future:
-        return self._ensure_router().submit(self.run_chain, fns, args, freshen)
+        """Admit a function chain; returns a Future for the final link's
+        result.  Tracing parity with ``submit``: a parent span (named
+        ``chain:a->b->…``) stamps admission and the router hop as its
+        ``queue`` phase, and every link runs under its own child span
+        (annotated with the parent id and link index) exactly as a
+        single submit would.  Raises ``UnknownFunction`` synchronously
+        when any link is unregistered."""
+        if not fns:
+            raise ValueError("submit_chain: empty chain")
+        pools = [self._pool_or_raise(fn) for fn in fns]
+        span = self.tracer.invocation(
+            "chain:" + "->".join(fns), app=pools[0].spec.app,
+            chain=list(fns))
+        span.mark_submitted()
+        return self._ensure_router().submit(
+            self._run_chain_traced, fns, args, freshen, span)
+
+    def _run_chain_traced(self, fns: List[str], args, freshen: bool, span):
+        if span.enabled and span.submitted_at is not None:
+            span.phase_from("queue", span.submitted_at)
+        out = args
+        try:
+            for i, fn in enumerate(fns):
+                child = None
+                if span.enabled:
+                    child = self.tracer.invocation(
+                        fn, app=self.pools[fn].spec.app,
+                        chain_parent=span.span_id, link=i)
+                    child.mark_submitted()
+                out = self.invoke(fn, out, freshen_successors=freshen,
+                                  _span=child)
+        except BaseException as exc:
+            span.finish(error=type(exc).__name__)
+            raise
+        span.finish()
+        return out
 
     def shutdown(self, wait: bool = True):
         """Stop the router; with ``wait=True`` (the default) also close
         every pool's idle instances once in-flight work has drained —
         terminating subprocess backend workers so platforms never leak
-        processes.  Pools stay usable afterwards (they re-provision)."""
+        processes.  Pools stay usable afterwards (they re-provision).
+        Closure-parked admissions are not router tasks yet, so the drain
+        first waits for the pools' waiter queues to empty (releases from
+        in-flight runs serve them) before stopping the router."""
+        if wait:
+            while any(p.async_waiting_count()
+                      for p in list(self.pools.values())):
+                time.sleep(0.001)
         with self._lock:
             router, self._router = self._router, None
+            fexec, self._freshen_exec = self._freshen_exec, None
+        if fexec is not None:
+            fexec.shutdown(wait=wait)
         if router is not None:
             router.shutdown(wait=wait)
         if wait:

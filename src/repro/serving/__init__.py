@@ -1,4 +1,5 @@
-from repro.serving.batching import Batcher, pad_batch  # noqa: F401
+from repro.serving.batching import (Batcher, EndpointBatcher,  # noqa: F401
+                                    pad_batch)
 from repro.serving.datastore import TieredDatastore  # noqa: F401
 from repro.serving.engine import ModelEndpoint, ServingEngine, WarmBudget  # noqa: F401
 from repro.serving.executor import Executor  # noqa: F401

@@ -31,6 +31,7 @@ from repro.configs.base import ModelConfig
 from repro.core.freshen import Action, FreshenPlan, PlanEntry
 from repro.core.runtime import FunctionSpec, RunContext, Runtime
 from repro.models import make_model
+from repro.serving.batching import EndpointBatcher, pad_batch
 from repro.serving.executor import Executor
 from repro.serving.weights import WeightStore
 
@@ -245,6 +246,11 @@ class ServingEngine:
             self.scheduler.tracer = tracer
         self.tracer = self.scheduler.tracer
         self.endpoints: Dict[str, ModelEndpoint] = {}
+        # pool-aware request batchers, one per endpoint deployed with
+        # ``batch_size=`` — single requests admitted via submit_request
+        # are formed into fabric-sized batches and run as ONE pooled
+        # invocation each
+        self.batchers: Dict[str, EndpointBatcher] = {}
         # the sharded fabric (repro.cluster), created lazily by the first
         # deploy(..., shards=N>1); single-scheduler deploys are untouched
         self.cluster = None
@@ -312,7 +318,9 @@ class ServingEngine:
                shards: Optional[int] = None,
                backend: Optional[str] = None,
                elastic: bool = False,
-               graded_warmth: Optional[bool] = None) -> Runtime:
+               graded_warmth: Optional[bool] = None,
+               batch_size: Optional[int] = None,
+               batch_max_wait: float = 0.01) -> Runtime:
         """Register an endpoint; with ``shards=N`` (N>1) it joins the
         sharded fabric: one ``InstancePool`` per shard behind the
         ``ClusterRouter`` (lazily built at the first sharded deploy),
@@ -344,7 +352,17 @@ class ServingEngine:
         warmth rung at a time (HOT -> INITIALIZED -> PROCESS) instead of
         reaping outright, and prewarm depth follows prediction
         confidence.  ``None`` (default) keeps the pool config's own
-        setting."""
+        setting.
+
+        ``batch_size=N`` installs a pool-aware ``EndpointBatcher`` in
+        front of the endpoint: single token rows admitted through
+        ``submit_request`` are formed into adaptively-sized batches
+        (never larger than N, the queue depth, or the fabric's current
+        idle capacity) and each batch runs as ONE pooled invocation —
+        one acquire/release, one span annotated with the fill count.
+        Saturation backpressures the batcher instead of failing
+        requests.  N is clamped to the endpoint's compiled batch shape
+        (padding covers partial fills; slicing beyond it cannot)."""
         self.endpoints[ep.name] = ep
         if pool_config is None:
             pool_config = self._default_pool_config()
@@ -368,11 +386,70 @@ class ServingEngine:
                     w.shard_id for w in cluster.workers)[:shards])
             self._clustered.add(ep.name)
             rt = min(runtimes.items())[1]
-            rt.init()
-            return rt
-        rt = self.scheduler.register(ep.spec(), config=pool_config)
+        else:
+            rt = self.scheduler.register(ep.spec(), config=pool_config)
         rt.init()
+        if batch_size is not None:
+            self._install_batcher(ep, batch_size, batch_max_wait)
         return rt
+
+    # -- pool-aware batching --------------------------------------------
+    def _idle_capacity(self, name: str) -> int:
+        """The fabric signal the endpoint batcher sizes against: idle
+        instances plus cap headroom, summed across shards when the
+        endpoint lives on the cluster."""
+        if self.cluster is not None and name in self._clustered:
+            return sum(w.idle_capacity(name) for w in self.cluster.workers)
+        pool = self.scheduler.pools.get(name)
+        return pool.idle_capacity() if pool is not None else 0
+
+    def _install_batcher(self, ep: ModelEndpoint, batch_size: int,
+                         max_wait: float):
+        fill_cap = max(1, min(batch_size, ep.batch_size))
+
+        def run_batch(payloads: List[Any]) -> Future:
+            # one pooled invocation for the whole batch: pad the rows to
+            # the endpoint's compiled shape, slice per-request logits
+            # rows back out when it resolves
+            fill = len(payloads)
+            tokens = pad_batch([np.asarray(p, np.int32) for p in payloads],
+                               ep.batch_size)
+            target = self._target(ep.name)
+            if target is self.scheduler:
+                span = self.tracer.invocation(ep.name, app=ep.app,
+                                              batch=True, fill=fill)
+                inner = self.scheduler.submit(ep.name, {"tokens": tokens},
+                                              _span=span)
+            else:                        # cluster routing opens its own span
+                inner = target.submit(ep.name, {"tokens": tokens})
+            out: Future = Future()
+
+            def _done(f: Future):
+                try:
+                    res = f.result()
+                    logits = res["logits"]
+                    out.set_result([logits[i] for i in range(fill)])
+                except BaseException as e:           # noqa: BLE001
+                    out.set_exception(e)
+
+            inner.add_done_callback(_done)
+            return out
+
+        self.batchers[ep.name] = EndpointBatcher(
+            ep.name, run_batch, batch_size=fill_cap, max_wait=max_wait,
+            capacity=lambda: self._idle_capacity(ep.name))
+
+    def submit_request(self, name: str, tokens_row) -> "Future":
+        """Admit ONE request (a single token row of the endpoint's
+        ``seq_len``) through the endpoint's pool-aware batcher; resolves
+        to that request's logits row.  Requires the endpoint to have been
+        deployed with ``batch_size=``."""
+        batcher = self.batchers.get(name)
+        if batcher is None:
+            raise KeyError(
+                f"endpoint {name!r} has no batcher: deploy it with "
+                f"batch_size= to enable single-request admission")
+        return batcher.submit(tokens_row)
 
     def _target(self, name: str):
         if self.cluster is not None and name in self._clustered:
@@ -437,7 +514,11 @@ class ServingEngine:
 
     def close(self, wait: bool = True):
         """Shut the scheduler's router down (idempotent); demos and tests
-        should call this in a finally block so worker threads never leak."""
+        should call this in a finally block so worker threads never leak.
+        Batchers close first: their drains dispatch through the
+        scheduler, which must still be alive to run them."""
+        for batcher in self.batchers.values():
+            batcher.close()
         self.scheduler.shutdown(wait=wait)
         if self.cluster is not None:
             self.cluster.shutdown(wait=wait)
@@ -455,4 +536,6 @@ class ServingEngine:
         if self.cluster is not None:
             for key, val in self.cluster.metrics_snapshot().items():
                 out[f"cluster.{key}"] = val
+        for batcher in self.batchers.values():
+            out.update(batcher.metrics_snapshot())
         return out

@@ -97,6 +97,7 @@ class AdaptDaemon:
         self._c_scale_ins = self.metrics.counter("scale_ins")
         self._c_errors = self.metrics.counter("errors")
         self._c_expired = self.metrics.counter("freshen_spans_expired")
+        self._c_waiters = self.metrics.counter("waiters_expired")
         self.fleet_actions: List[Tuple[int, str, int]] = []
         self._idle_passes = 0
         # windowed cold-rate baselines, seeded from the cluster's current
@@ -143,6 +144,10 @@ class AdaptDaemon:
     def errors(self) -> int:
         return self._c_errors.value
 
+    @property
+    def waiters_expired(self) -> int:
+        return self._c_waiters.value
+
     # ------------------------------------------------------------------
     def _live_schedulers(self) -> List[FreshenScheduler]:
         """Static schedulers plus the cluster's *current* shard set —
@@ -171,11 +176,15 @@ class AdaptDaemon:
         # On graded pools the same tick drives the demotion ladder: each
         # pass drops expired instances one warmth rung (tracked via the
         # pool's demotion counter delta).
+        # the same tick also sweeps closure-parked acquire_async waiters
+        # past their deadline: a timed-out waiter's callback (its
+        # PoolSaturated) must fire even if no release ever comes.
         for sched in schedulers:
             for pool in list(sched.pools.values()):
                 before = pool.demotions
                 self._c_reaped.inc(pool.reap())
                 self._c_demoted.inc(pool.demotions - before)
+                self._c_waiters.inc(pool.sweep_waiters())
         # expire stale freshen spans on the same traffic-independent tick:
         # the tracer otherwise only sweeps lazily on export, so a fabric
         # that goes quiet would hold "pending" anchors forever.  Shards

@@ -15,6 +15,11 @@
    (warm_idle <= warm_total <= size <= cap), graded reaping never skips a
    rung downward, acquire accounting balances, and every admitted future
    resolves.
+8. Async admission (PR 9 hot path): under ANY interleaving of
+   try_acquire/acquire_async/release/sweep/cancel, every parked callback
+   fires exactly once (grant or PoolSaturated) or never if cancelled,
+   grants follow admission order, waiters never starve next to idle
+   capacity, and acquire accounting still balances.
 """
 import threading
 import time
@@ -278,3 +283,98 @@ def test_scheduler_never_loses_admitted_futures(ops):
         assert s["cold_starts"] + s["warm_acquires"] == len(futs)
     finally:
         sched.shutdown()
+
+
+# ----------------------------------------------------------------------
+# Async admission machine under random interleavings (PR 9 hot path).
+# Single-threaded on purpose: acquire_async fires callbacks synchronously
+# on the driving thread (immediate grants) or on the releasing/sweeping
+# thread (handoffs/expiries), so hypothesis fully controls the order.
+
+_ASYNC_OPS = st.sampled_from(
+    ["try", "park", "park_expired", "release", "sweep", "cancel"])
+
+
+@settings(max_examples=40, deadline=None)
+@given(ops=st.lists(st.tuples(_ASYNC_OPS, st.integers(0, 7)),
+                    min_size=1, max_size=50))
+def test_async_admission_interleavings(ops):
+    cap = 2
+    pool = InstancePool(FunctionSpec("p", lambda ctx, args: args, app="prop"),
+                        PoolConfig(max_instances=cap, keep_alive=60.0))
+    held = []          # instances this driver owns (try hits + grants)
+    records = []       # one dict per acquire_async, in admission order
+    seq, try_hits = [0], [0]
+    served_order = []
+
+    def park(timeout=None):
+        rec = {"seq": seq[0], "fired": 0, "inst": None, "error": None,
+               "cancelled": False}
+        seq[0] += 1
+
+        def cb(inst, queue_delay, cold, error):
+            rec["fired"] += 1
+            rec["inst"], rec["error"] = inst, error
+            if inst is not None:
+                held.append(inst)
+                served_order.append(rec["seq"])
+        rec["handle"] = pool.acquire_async(cb, timeout=timeout)
+        records.append(rec)
+
+    def check():
+        # a parked waiter next to an idle instance means starvation:
+        # release hands off directly and try_acquire never queue-jumps
+        assert not (pool.idle_count() > 0 and pool.async_waiting_count() > 0)
+        for r in records:
+            assert r["fired"] <= 1                      # at most once, ever
+            if r["cancelled"]:
+                assert r["fired"] == 0                  # cancelled: never
+        # grants are handed out in admission order
+        assert served_order == sorted(served_order)
+
+    try:
+        for op, k in ops:
+            if op == "try":
+                got = pool.try_acquire()
+                if got is not None:
+                    held.append(got[0])
+                    try_hits[0] += 1
+            elif op == "park":
+                park()
+            elif op == "park_expired":
+                park(timeout=0.0)       # expires on the next sweep
+            elif op == "release":
+                if held:
+                    pool.release(held.pop(k % len(held)))
+            elif op == "sweep":
+                pool.sweep_waiters()
+            else:   # cancel the oldest still-pending waiter
+                for r in records:
+                    if not r["cancelled"] and r["handle"].pending:
+                        r["cancelled"] = r["handle"].cancel()
+                        break
+            check()
+
+        # drain: hand everything back, then sweep out any zero-timeout
+        # stragglers — no admitted waiter may be left unresolved
+        while held:
+            pool.release(held.pop())
+            check()
+        pool.sweep_waiters()
+        pool.retire()                   # fails any remaining waiters
+        for r in records:
+            if r["cancelled"]:
+                assert r["fired"] == 0
+            else:
+                assert r["fired"] == 1, "admitted waiter dropped"
+                assert (r["inst"] is not None) ^ isinstance(r["error"],
+                                                            PoolSaturated)
+        s = pool.stats()
+        grants = sum(1 for r in records if r["inst"] is not None)
+        # every admission — inline hit or async grant — billed exactly once
+        assert s["cold_starts"] + s["warm_acquires"] == grants + try_hits[0]
+        assert pool.async_waiting_count() == 0
+    finally:
+        while held:
+            pool.release(held.pop())
+        pool.retire()
