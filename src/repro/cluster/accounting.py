@@ -69,7 +69,8 @@ class ClusterAccountant:
             total.function_invocations += b.function_invocations
             total.mispredicted_freshens += b.mispredicted_freshens
             total.useful_freshens += b.useful_freshens
-            total.cold_starts += b.cold_starts
+            # AppBill ledger aggregation, not a registry counter view
+            total.cold_starts += b.cold_starts   # fabriclint: allow[counter]
             total.queue_seconds += b.queue_seconds
         return total
 

@@ -44,7 +44,7 @@ import time
 from collections import OrderedDict
 from concurrent.futures import Future
 from dataclasses import dataclass, field, replace
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core.accounting import Accountant
 from repro.core.pool import PoolConfig, PoolSaturated
@@ -191,10 +191,14 @@ class ClusterRouter:
                  policy: Union[str, object] = "warmth-aware",
                  spill_timeout: Optional[float] = None,
                  cross_freshen: bool = True,
-                 tracer: Optional[Tracer] = None):
+                 tracer: Optional[Tracer] = None,
+                 clock: Callable[[], float] = time.monotonic):
         if not workers:
             raise ValueError("a cluster needs at least one worker")
         self.tracer = tracer or NULL_TRACER
+        # drain deadlines pace real thread joins, so the default must be
+        # the wall clock; injectable for tests
+        self.clock = clock
         self._workers: List[ClusterWorker] = list(workers)
         self._by_shard = {w.shard_id: w for w in self._workers}
         if len(self._by_shard) != len(self._workers):
@@ -463,19 +467,22 @@ class ClusterRouter:
                     continue
                 threads.extend(target.prewarm(fn, provision=True))
                 report.handoffs.append((fn, target.shard_id))
+            # _admin is the slow control plane: a drain *waits* by design
+            # (handoff threads, in-flight work) while the data-plane _lock
+            # stays free — submits keep routing around the draining shard
             for th in threads:
-                th.join(timeout=drain_timeout)
+                th.join(timeout=drain_timeout)   # fabriclint: allow[blocking]
             # (3) let in-flight and queued work finish: load counts busy
             # instances plus blocked acquires, so zero means every future
             # routed here has resolved
-            deadline = time.monotonic() + drain_timeout
-            while worker.load() > 0 and time.monotonic() < deadline:
-                time.sleep(0.002)
+            deadline = self.clock() + drain_timeout
+            while worker.load() > 0 and self.clock() < deadline:
+                time.sleep(0.002)                # fabriclint: allow[blocking]
         # (4) fold the shard's ledger into retained cluster history
         self.accountant.retire(worker.scheduler.accountant)
         # (5) shut the worker down (with drain this also waits for any
         # router-thread stragglers before closing pools)
-        worker.shutdown(wait=drain)
+        worker.shutdown(wait=drain)              # fabriclint: allow[blocking]
         if not drain:
             # shutdown(wait=False) skips pool close; retire the pools so
             # idle instances close now and instances busy at removal
@@ -749,8 +756,10 @@ class ClusterRouter:
                     return
                 self._closed = True
                 workers = list(self._workers)
+            # control-plane blocking by design: shutdown holds _admin (not
+            # _lock) so a racing add_worker sees the closed router
             for w in workers:
-                w.shutdown(wait=wait)
+                w.shutdown(wait=wait)            # fabriclint: allow[blocking]
 
 
 def partition_devices(devices: Optional[Sequence], num_shards: int

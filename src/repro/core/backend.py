@@ -45,6 +45,9 @@ escape hatch for closure-built specs and endpoints holding unpicklable
 state).
 """
 from __future__ import annotations
+# fabriclint: allow-file[blocking,clock] -- the channel lock exists to
+# serialize pipe I/O with the worker (blocking inside it is the
+# contract), and spawn/boot timings are measured wall-clock costs.
 
 import os
 import pickle

@@ -48,6 +48,9 @@ children before every fork (``waitpid(-1, WNOHANG)``); children that
 outlive a closed template notice socket EOF and exit.
 """
 from __future__ import annotations
+# fabriclint: allow-file[blocking,clock] -- the template lock serializes
+# the fork protocol (pipe/socket I/O under it is the contract), and
+# template-boot/fork timings are measured wall-clock costs.
 
 import os
 import shutil

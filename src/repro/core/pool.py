@@ -723,6 +723,7 @@ class InstancePool:
         or snapshot fork killed) is evicted here instead of handed out:
         dropping it shrinks the pool, so the same loop iteration may then
         scale up a fresh instance rather than fail the invocation."""
+        # fabriclint: allow[clock] -- waiter deadlines/queue delay are wall-clock contracts
         t0 = time.monotonic()
         self.reap()
         doomed: List[PooledInstance] = []
@@ -748,6 +749,7 @@ class InstancePool:
             # close corpses outside the lock: stats/close on a dead
             # channel backend must never stall other acquires
             self._fold_and_close(doomed, join_timeout=0.0)
+        # fabriclint: allow[clock] -- waiter deadlines/queue delay are wall-clock contracts
         queue_delay = time.monotonic() - t0
         self._h_queue_delay.observe(queue_delay)
         return inst, queue_delay, cold
@@ -795,6 +797,7 @@ class InstancePool:
         expired idle instances first, so admission mode never changes
         keep-alive semantics."""
         self.reap()
+        # fabriclint: allow[clock] -- waiter deadlines/queue delay are wall-clock contracts
         t0 = time.monotonic()
         deadline = None if timeout is None else t0 + timeout
         waiter = _AsyncWaiter(cb=cb, enqueued=t0, deadline=deadline)
@@ -814,10 +817,12 @@ class InstancePool:
                 self._async_waiters.append(waiter)
         self._fold_and_close(doomed, join_timeout=0.0)
         if waiter.state == "served":
+            # fabriclint: allow[clock] -- waiter deadlines/queue delay are wall-clock contracts
             queue_delay = time.monotonic() - t0
             self._h_queue_delay.observe(queue_delay)
             self._fire_cb(waiter, inst, queue_delay, cold, None)
         elif waiter.state == "failed":
+            # fabriclint: allow[clock] -- waiter deadlines/queue delay are wall-clock contracts
             self._fire_cb(waiter, None, time.monotonic() - t0, False,
                           waiter.error)
         return AcquireWaiter(self, waiter)
@@ -841,6 +846,7 @@ class InstancePool:
         ``_dispatch_async`` to fire outside the lock."""
         grants: List[Tuple[_AsyncWaiter, PooledInstance, bool]] = []
         expired: List[_AsyncWaiter] = []
+        # fabriclint: allow[clock] -- waiter deadlines/queue delay are wall-clock contracts
         now = time.monotonic()
         while self._async_waiters:
             w = self._async_waiters[0]
@@ -866,6 +872,7 @@ class InstancePool:
 
     def _dispatch_async(self, grants: List, expired: List):
         """Fire grant/expiry callbacks collected under the lock."""
+        # fabriclint: allow[clock] -- waiter deadlines/queue delay are wall-clock contracts
         now = time.monotonic()
         for w, inst, cold in grants:
             queue_delay = now - w.enqueued

@@ -199,7 +199,11 @@ class Runtime:
         with self._init_lock:
             if level >= self.warmth:
                 return
-            self.backend.demote(self, level)
+            # _init_lock exists to serialize warmth transitions; the
+            # backend demote (possibly a pipe round-trip) IS the
+            # transition.  Callers must not hold pool/scheduler locks
+            # here — the runtime sanitizer enforces that order.
+            self.backend.demote(self, level)     # fabriclint: allow[blocking]
             self.warmth = level
 
     def _promote_locked(self, target: WarmthLevel) -> None:
@@ -215,14 +219,16 @@ class Runtime:
                 t0 = self.clock()
                 with span.phase("boot_process", backend=type(self.backend)
                                 .__name__):
-                    self.backend.boot_process(self)
+                    # _init_lock serializes boot; blocking here is its
+                    # contract (never held with pool/scheduler locks)
+                    self.backend.boot_process(self)  # fabriclint: allow[blocking]
                 self.process_seconds = self.clock() - t0
                 self.warmth = WarmthLevel.PROCESS
             if target >= WarmthLevel.INITIALIZED \
                     and self.warmth < WarmthLevel.INITIALIZED:
                 t0 = self.clock()
                 with span.phase("boot_init"):
-                    self.backend.boot_init(self)
+                    self.backend.boot_init(self)     # fabriclint: allow[blocking]
                 self.init_step_seconds = self.clock() - t0
                 self.warmth = WarmthLevel.INITIALIZED
                 self.init_seconds = (self.process_seconds

@@ -331,6 +331,7 @@ class FreshenScheduler:
             self.events.append(FreshenEvent(pred.fn, pred.probability, False,
                                             "policy-gated"))
             return False
+        # fabriclint: allow[clock] -- measured service/freshen time is a wall-clock contract
         t0 = time.monotonic()
         threads = pool.prewarm_freshen(level=level)
         if not threads:
@@ -356,6 +357,7 @@ class FreshenScheduler:
                     th.join()
                 fspan.dispatch_done()
                 self.accountant.record_freshen(
+                    # fabriclint: allow[clock] -- measured service/freshen time is a wall-clock contract
                     app, pred.fn, time.monotonic() - t0,
                     expected_delay=pred.expected_delay)
 
@@ -382,6 +384,7 @@ class FreshenScheduler:
     def _freshen_async(self, fn: str):
         """Queue prediction + prewarm dispatch for ``fn``'s admission on
         the dedicated freshen executor — off the request critical path."""
+        # fabriclint: allow[clock] -- measured service/freshen time is a wall-clock contract
         now = time.monotonic()
         try:
             self._ensure_freshen_exec().submit(
@@ -414,6 +417,7 @@ class FreshenScheduler:
                 inst, queue_delay, cold = pool.acquire(
                     timeout=acquire_timeout)
             span.annotate(queue_delay=queue_delay, cold=cold)
+            # fabriclint: allow[clock] -- measured service/freshen time is a wall-clock contract
             t0 = time.monotonic()
             try:
                 # activate so Runtime's lazy boot path attaches
@@ -429,6 +433,7 @@ class FreshenScheduler:
         # accounting only on success (seed semantics): a raising function
         # body must not be billed, skew latency percentiles, or credit
         # pending freshens as useful
+        # fabriclint: allow[clock] -- measured service/freshen time is a wall-clock contract
         service = time.monotonic() - t0
         self._m_e2e.observe(queue_delay + service)
         self._m_queue.observe(queue_delay)
@@ -448,6 +453,7 @@ class FreshenScheduler:
             # admission -> this thread: the only hop the fast path pays
             span.phase_from("queue", span.submitted_at)
         span.annotate(queue_delay=queue_delay, cold=cold)
+        # fabriclint: allow[clock] -- measured service/freshen time is a wall-clock contract
         t0 = time.monotonic()
         try:
             try:
@@ -459,6 +465,7 @@ class FreshenScheduler:
         except BaseException as exc:
             span.finish(error=type(exc).__name__)
             raise
+        # fabriclint: allow[clock] -- measured service/freshen time is a wall-clock contract
         service = time.monotonic() - t0
         self._m_e2e.observe(queue_delay + service)
         self._m_queue.observe(queue_delay)
@@ -538,21 +545,32 @@ class FreshenScheduler:
                 _span.finish(error=type(error).__name__)
                 fut.set_exception(error)
                 return
-            try:
-                inner = self._ensure_router().submit(
-                    self._run_acquired, fn, pool, inst, args, _span,
-                    queue_delay, cold)
-            except BaseException as exc:
-                # router rejected the tail (shutdown race): put the
-                # instance back and surface the error — never drop an
-                # admitted future
-                pool.release(inst)
-                _span.finish(error=type(exc).__name__)
-                fut.set_exception(exc)
-                return
-            inner.add_done_callback(lambda f: (
-                fut.set_exception(f.exception()) if f.exception() is not None
-                else fut.set_result(f.result())))
+            # the waiter left the pool queue before this callback runs, so
+            # shutdown's drain (which watches async_waiting_count) can kill
+            # the router inside that window; don't _ensure_router here —
+            # that would resurrect a leaked executor after shutdown
+            with self._lock:
+                router = self._router
+            if router is not None:
+                try:
+                    inner = router.submit(
+                        self._run_acquired, fn, pool, inst, args, _span,
+                        queue_delay, cold)
+                except RuntimeError:
+                    router = None      # shut down between grant and handoff
+                else:
+                    inner.add_done_callback(lambda f: (
+                        fut.set_exception(f.exception())
+                        if f.exception() is not None
+                        else fut.set_result(f.result())))
+            if router is None:
+                # run the tail inline on the releasing thread — an
+                # admitted future is never dropped
+                try:
+                    fut.set_result(self._run_acquired(
+                        fn, pool, inst, args, _span, queue_delay, cold))
+                except BaseException as exc:
+                    fut.set_exception(exc)
 
         pool.acquire_async(_granted)
         return fut

@@ -5,6 +5,8 @@ drive synthetic load through a chain.
   PYTHONPATH=src python -m repro.launch.serve --no-freshen ...   # baseline
 """
 from __future__ import annotations
+# fabriclint: allow-file[clock] -- launch-time measurement harness:
+# wall-clock stamps feed the printed timings only.
 
 import argparse
 import dataclasses

@@ -59,10 +59,14 @@ class Batcher:
     submitted after close raise ``RuntimeError``."""
 
     def __init__(self, batch_size: int, handler: Callable[[List[Any]], List[Any]],
-                 max_wait: float = 0.01, name: str = "batcher"):
+                 max_wait: float = 0.01, name: str = "batcher",
+                 clock: Callable[[], float] = time.monotonic):
         self.batch_size = batch_size
         self.handler = handler
         self.max_wait = max_wait
+        # paces queue.get timeouts, so the default must be the wall
+        # clock; injectable for tests
+        self.clock = clock
         self._q: queue.Queue = queue.Queue()
         self._stop = False
         self._lifecycle = threading.Lock()   # makes submit-vs-close atomic
@@ -132,9 +136,9 @@ class Batcher:
             # honored exactly — a batch never waits longer than max_wait,
             # even when requests keep trickling in.
             batch: List[Request] = [first]
-            deadline = time.monotonic() + self.max_wait
+            deadline = self.clock() + self.max_wait
             while len(batch) < self.batch_size:
-                remaining = deadline - time.monotonic()
+                remaining = deadline - self.clock()
                 if remaining <= 0:
                     break
                 try:
@@ -223,13 +227,17 @@ class EndpointBatcher:
                  run_batch: Callable[[List[Any]], Future],
                  batch_size: int, max_wait: float = 0.01,
                  capacity: Optional[Callable[[], int]] = None,
-                 retry_interval: float = 0.005):
+                 retry_interval: float = 0.005,
+                 clock: Callable[[], float] = time.monotonic):
         self.name = name
         self.run_batch = run_batch
         self.batch_size = batch_size
         self.max_wait = max_wait
         self.capacity = capacity
         self.retry_interval = retry_interval
+        # deadlines are compared against Request.submitted_at (monotonic
+        # domain) and pace real cond waits; injectable for tests
+        self.clock = clock
         self._pending: Deque[Request] = deque()
         self._cond = threading.Condition()
         self._stop = False
@@ -287,7 +295,7 @@ class EndpointBatcher:
             with self._cond:
                 while (len(self._pending) < self.batch_size
                        and not self._stop):
-                    remaining = deadline - time.monotonic()
+                    remaining = deadline - self.clock()
                     if remaining <= 0:
                         break
                     self._cond.wait(remaining)

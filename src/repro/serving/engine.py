@@ -196,18 +196,23 @@ class ModelEndpoint:
 
     def code(self, ctx: RunContext, args):
         """The run-hook body (Algorithm 3: annotated λ)."""
+        # fabriclint: allow[clock] -- measured run-phase timing is a wall-clock contract
         t0 = time.monotonic()
         tokens = jnp.asarray(args["tokens"], jnp.int32)
         assert tokens.shape == (self.batch_size, self.seq_len), tokens.shape
         params = ctx.fr_fetch(0)                  # FrFetch(0, DataGet(...))
+        # fabriclint: allow[clock] -- measured run-phase timing is a wall-clock contract
         t_w = time.monotonic()
         compiled = ctx.fr_fetch(1)                # FrFetch(1, compile)
+        # fabriclint: allow[clock] -- measured run-phase timing is a wall-clock contract
         t_c = time.monotonic()
         ctx.fr_warm(2)                            # FrWarm(2, warmup)
+        # fabriclint: allow[clock] -- measured run-phase timing is a wall-clock contract
         t_u = time.monotonic()
         extra = ctx.fr_fetch(3) if len(ctx.runtime.fr_state.plan) > 3 else None
         logits = compiled(params, tokens)
         logits = jax.block_until_ready(logits)
+        # fabriclint: allow[clock] -- measured run-phase timing is a wall-clock contract
         t1 = time.monotonic()
         self.warm_budget.observe((self.name, self.batch_size, self.seq_len))
         timing = {"total": t1 - t0, "weights": t_w - t0,

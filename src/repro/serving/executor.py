@@ -5,6 +5,8 @@
 invocation.  The cache is keyed by (name, shapes) and is runtime-scoped.
 """
 from __future__ import annotations
+# fabriclint: allow-file[clock] -- compile/warmup seconds are measured
+# wall-clock costs fed to the freshen planner.
 
 import threading
 import time

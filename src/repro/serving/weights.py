@@ -4,6 +4,8 @@ disk (repro.checkpoint); loading measures real IO + deserialization time,
 plus the modeled tier transfer when the store sits behind a datastore tier.
 """
 from __future__ import annotations
+# fabriclint: allow-file[clock] -- weight-load seconds are measured
+# wall-clock costs fed to the freshen planner.
 
 import os
 import threading

@@ -299,7 +299,9 @@ class AdaptDaemon:
                 # the event, or clearing could revive the old loop and leak
                 # a second one running alongside the new thread
                 self._stop.set()
-                self._thread.join()
+                # start/stop are rare control-plane calls; joining the old
+                # loop under _state_lock is what makes restart atomic
+                self._thread.join()              # fabriclint: allow[blocking]
             self._stop.clear()
             self._thread = threading.Thread(target=self._run,
                                             name="adapt-daemon", daemon=True)

@@ -26,6 +26,9 @@ while it drains; subsequent arrivals fire late and are reported as lag,
 exactly like any other platform stall under open-loop replay.
 """
 from __future__ import annotations
+# fabriclint: allow-file[clock] -- open-loop replay paces arrivals
+# against the real wall clock by contract (time-compressed traces
+# still sleep real seconds).
 
 import time
 from dataclasses import dataclass, field

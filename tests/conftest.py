@@ -4,10 +4,30 @@ import os
 # xla_force_host_platform_device_count (as its first two lines).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+# FABRIC_SANITIZE=1 turns every lock the fabric creates into a tracked
+# proxy feeding a global acquisition-order graph, so the whole suite
+# doubles as a deadlock detector.  Install BEFORE jax/test imports so no
+# fabric lock predates the patch (stdlib/third-party locks are never
+# wrapped).  See docs/concurrency.md.
+from repro.analysis import sanitizer as _sanitizer  # noqa: E402
+
+_SANITIZE = _sanitizer.enabled_by_env()
+if _SANITIZE:
+    _SAN_GRAPH = _sanitizer.install()
+
 import jax  # noqa: E402
 import pytest  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(autouse=True)
+def _fabric_sanitize_check():
+    """Under FABRIC_SANITIZE=1, fail the test that first produced a lock
+    ordering violation or an acquisition-graph cycle."""
+    yield
+    if _SANITIZE:
+        _SAN_GRAPH.assert_clean()
 
 
 class FakeClock:

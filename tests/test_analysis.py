@@ -1,0 +1,377 @@
+"""fabriclint linter tests: per-rule fixtures (positive hit, allowlisted
+miss, pragma suppression), baseline round-trip, and the meta-test that
+the repo at head lints clean."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.lint import (
+    Finding, baseline_payload, lint_paths, new_findings,
+)
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def run_lint(tmp_path: Path, source: str, rel: str = "mod.py"):
+    target = tmp_path / rel
+    target.parent.mkdir(parents=True, exist_ok=True)
+    target.write_text(textwrap.dedent(source), encoding="utf-8")
+    findings, errors = lint_paths([target], root=tmp_path)
+    assert not errors, errors
+    return findings
+
+
+def rules_of(findings):
+    return sorted(f.rule for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# R1 blocking-under-lock
+
+
+def test_r1_sleep_under_lock(tmp_path):
+    findings = run_lint(tmp_path, """\
+        import time
+
+        class Pool:
+            def bad(self):
+                with self._lock:
+                    time.sleep(0.1)
+        """)
+    assert rules_of(findings) == ["R1"]
+    assert findings[0].detail == "sleep"
+    assert "Pool.bad" in findings[0].scope
+
+
+def test_r1_future_result_and_pipe_io_under_lock(tmp_path):
+    findings = run_lint(tmp_path, """\
+        class W:
+            def bad(self, fut, conn):
+                with self._cond:
+                    fut.result()
+                    conn.recv_bytes()
+        """)
+    assert rules_of(findings) == ["R1", "R1"]
+
+
+def test_r1_locked_suffix_convention(tmp_path):
+    # `*_locked` functions run under a caller-held lock by convention
+    findings = run_lint(tmp_path, """\
+        class Router:
+            def _drain_locked(self, th):
+                th.join(timeout=1.0)
+        """)
+    assert rules_of(findings) == ["R1"]
+    assert findings[0].detail == "join"
+
+
+def test_r1_condition_wait_is_allowlisted(tmp_path):
+    # a condition wait *releases* the lock: the sanctioned blocking form
+    findings = run_lint(tmp_path, """\
+        class Pool:
+            def ok(self):
+                with self._cond:
+                    while not self.ready:
+                        self._cond.wait(0.1)
+                    self._cond.notify_all()
+        """)
+    assert findings == []
+
+
+def test_r1_nested_function_body_runs_later(tmp_path):
+    # a closure defined under the lock executes outside it
+    findings = run_lint(tmp_path, """\
+        import time
+
+        class Pool:
+            def ok(self):
+                with self._lock:
+                    def later():
+                        time.sleep(1.0)
+                    self.cb_fn = later
+        """)
+    assert findings == []
+
+
+def test_r1_pragma_suppression(tmp_path):
+    findings = run_lint(tmp_path, """\
+        import time
+
+        class Pool:
+            def documented(self):
+                with self._lock:
+                    time.sleep(0.1)   # fabriclint: allow[blocking]
+        """)
+    assert findings == []
+
+
+def test_r1_str_join_not_flagged(tmp_path):
+    findings = run_lint(tmp_path, """\
+        class Fmt:
+            def ok(self, parts):
+                with self._lock:
+                    return ", ".join(parts)
+        """)
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# R2 lock-hierarchy
+
+
+def test_r2_admin_under_data_lock(tmp_path):
+    findings = run_lint(tmp_path, """\
+        class Router:
+            def bad(self):
+                with self._lock:
+                    with self._admin:
+                        pass
+        """)
+    assert rules_of(findings) == ["R2"]
+    assert findings[0].detail == "_lock->_admin"
+
+
+def test_r2_declared_order_is_clean(tmp_path):
+    findings = run_lint(tmp_path, """\
+        class Router:
+            def ok(self):
+                with self._admin:
+                    with self._lock:
+                        pass
+        """)
+    assert findings == []
+
+
+def test_r2_same_level_nesting_flagged(tmp_path):
+    findings = run_lint(tmp_path, """\
+        class Pool:
+            def bad(self, other):
+                with self._lock:
+                    with other._lock:
+                        pass
+        """)
+    assert rules_of(findings) == ["R2"]
+
+
+# ---------------------------------------------------------------------------
+# R3 clock-hygiene
+
+
+def test_r3_direct_call_flagged(tmp_path):
+    findings = run_lint(tmp_path, """\
+        import time
+
+        def stamp():
+            return time.monotonic()
+        """)
+    assert rules_of(findings) == ["R3"]
+    assert findings[0].detail == "time.monotonic"
+
+
+def test_r3_reference_default_allowed(tmp_path):
+    # injection points take the *function*, they don't call it
+    findings = run_lint(tmp_path, """\
+        import time
+
+        class Pool:
+            def __init__(self, clock=time.monotonic):
+                self.clock = clock
+        """)
+    assert findings == []
+
+
+def test_r3_injection_fallback_idiom_allowed(tmp_path):
+    findings = run_lint(tmp_path, """\
+        import time
+
+        def observe(now=None):
+            now = time.monotonic() if now is None else now
+            return now
+        """)
+    assert findings == []
+
+
+def test_r3_tests_and_benchmarks_exempt(tmp_path):
+    src = """\
+        import time
+
+        def wall():
+            return time.time()
+        """
+    assert rules_of(run_lint(tmp_path, src, "pkg/mod.py")) == ["R3"]
+    assert run_lint(tmp_path, src, "tests/test_mod.py") == []
+    assert run_lint(tmp_path, src, "benchmarks/bench.py") == []
+
+
+def test_r3_file_pragma(tmp_path):
+    findings = run_lint(tmp_path, """\
+        # fabriclint: allow-file[clock] -- measurement harness
+        import time
+
+        def wall():
+            return time.time()
+        """)
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# R4 counter-drift
+
+
+def test_r4_direct_counter_mutation(tmp_path):
+    findings = run_lint(tmp_path, """\
+        class Pool:
+            def bad(self):
+                self.cold_starts += 1
+        """)
+    assert rules_of(findings) == ["R4"]
+    assert findings[0].detail == "cold_starts"
+
+
+def test_r4_registry_counter_ok(tmp_path):
+    findings = run_lint(tmp_path, """\
+        class Pool:
+            def ok(self):
+                self._c_cold.inc()
+        """)
+    assert findings == []
+
+
+def test_r4_pragma_on_preceding_line(tmp_path):
+    findings = run_lint(tmp_path, """\
+        class Bill:
+            def fold(self, other):
+                # fabriclint: allow[counter]
+                self.cold_starts += other.cold_starts
+        """)
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# R5 span-leak
+
+
+def test_r5_leaked_span(tmp_path):
+    findings = run_lint(tmp_path, """\
+        def bad(tracer):
+            span = tracer.invocation("f", app="a")
+            span.phase("route")
+        """)
+    assert rules_of(findings) == ["R5"]
+    assert findings[0].detail == "span"
+
+
+def test_r5_completed_span_ok(tmp_path):
+    findings = run_lint(tmp_path, """\
+        def ok(tracer):
+            span = tracer.invocation("f", app="a")
+            try:
+                pass
+            finally:
+                span.finish()
+        """)
+    assert findings == []
+
+
+def test_r5_escaping_span_ok(tmp_path):
+    # a span handed to another owner is that owner's to complete
+    findings = run_lint(tmp_path, """\
+        def ok(tracer, sink):
+            span = tracer.freshen("f")
+            sink.append(span)
+
+        def ok2(tracer):
+            return tracer.invocation("g")
+        """)
+    assert findings == []
+
+
+def test_r5_discarded_span_expression(tmp_path):
+    findings = run_lint(tmp_path, """\
+        def bad(tracer):
+            tracer.invocation("f")
+        """)
+    assert rules_of(findings) == ["R5"]
+    assert findings[0].detail == "discarded-span"
+
+
+# ---------------------------------------------------------------------------
+# baseline round-trip
+
+
+def test_baseline_round_trip(tmp_path):
+    source = """\
+        import time
+
+        class Pool:
+            def legacy(self):
+                with self._lock:
+                    time.sleep(0.1)
+        """
+    findings = run_lint(tmp_path, source)
+    assert len(findings) == 1
+
+    payload = baseline_payload(findings)
+    baseline_file = tmp_path / "baseline.json"
+    baseline_file.write_text(json.dumps(payload))
+    baseline = {k: int(v) for k, v in
+                json.loads(baseline_file.read_text())["findings"].items()}
+
+    # unchanged tree: everything baselined, nothing new
+    assert new_findings(findings, baseline) == []
+
+    # a second violation of the same fingerprint IS new (counts matter)
+    worse = run_lint(tmp_path, source + """\
+
+            def regressed(self):
+                with self._lock:
+                    time.sleep(0.2)
+        """)
+    assert len(worse) == 2
+    fresh = new_findings(worse, baseline)
+    assert len(fresh) == 1 and fresh[0].rule == "R1"
+
+
+def test_fingerprint_is_line_number_free(tmp_path):
+    src = textwrap.dedent("""\
+        import time
+
+        class Pool:
+            def legacy(self):
+                with self._lock:
+                    time.sleep(0.1)
+        """)
+    before = run_lint(tmp_path, src)
+    shifted = run_lint(tmp_path, "# a new comment shifts every line\n" + src)
+    assert [f.fingerprint for f in before] == \
+        [f.fingerprint for f in shifted]
+    assert before[0].line != shifted[0].line
+
+
+# ---------------------------------------------------------------------------
+# the repo itself
+
+
+def test_repo_lints_clean_at_head():
+    """`python -m repro.analysis.lint src tests` exits 0 against the
+    checked-in baseline — the same gate CI runs."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (str(REPO_ROOT / "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", "src", "tests"],
+        cwd=REPO_ROOT, env=env, capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_checked_in_baseline_is_empty():
+    """Every finding at head is fixed or carries a reviewed pragma; the
+    baseline exists purely as the CI ratchet for future findings."""
+    data = json.loads(
+        (REPO_ROOT / "tools" / "fabriclint_baseline.json").read_text())
+    assert data["findings"] == {}

@@ -1,0 +1,228 @@
+"""Runtime lock-order sanitizer tests: graph/cycle mechanics, the
+tracked-lock proxies, the declared-invariant checks (admin-under-lock,
+telemetry leaves, same-class nesting), and fabric scenarios — a
+60-thread scheduler hammer and a full router lifecycle — asserting the
+observed acquisition graph stays acyclic and ``_admin`` is only ever the
+outermost lock."""
+import threading
+from concurrent.futures import wait
+
+import pytest
+
+from repro.analysis import sanitizer
+from repro.analysis.sanitizer import (
+    LockGraph, LockOrderError, _Tracked, _TrackedCondition, held_keys,
+)
+from repro.core.runtime import FunctionSpec
+from repro.core.scheduler import FreshenScheduler
+
+
+@pytest.fixture
+def fresh_graph(monkeypatch):
+    """A private LockGraph swapped in for the module global, so tests can
+    manufacture violations without tripping the session-wide
+    FABRIC_SANITIZE autouse check."""
+    g = LockGraph()
+    monkeypatch.setattr(sanitizer, "graph", g)
+    return g
+
+
+@pytest.fixture
+def installed():
+    """Sanitizer installed for the duration of the test (no-op when the
+    FABRIC_SANITIZE=1 session fixture already installed it)."""
+    was = sanitizer._installed
+    g = sanitizer.install()
+    yield g
+    if not was:
+        sanitizer.uninstall()
+
+
+# ---------------------------------------------------------------------------
+# graph mechanics
+
+
+def test_cycle_detection():
+    g = LockGraph()
+    g.record({"a"}, "b")
+    g.record({"b"}, "c")
+    g.assert_acyclic()
+    g.record({"c"}, "a")
+    cycle = g.find_cycle()
+    assert cycle is not None and cycle[0] == cycle[-1]
+    with pytest.raises(LockOrderError, match="cycle"):
+        g.assert_acyclic()
+
+
+def test_reset_clears_edges_and_violations():
+    g = LockGraph()
+    g.record({"a"}, "b")
+    g.violation("admin-under-lock", "x", ["y"])
+    g.reset()
+    assert g.edges() == {}
+    assert g.violations == []
+    g.assert_clean()
+
+
+# ---------------------------------------------------------------------------
+# tracked proxies
+
+
+def test_tracked_lock_records_edges(fresh_graph):
+    a = _Tracked(threading.Lock(), "a.py:_lock")
+    b = _Tracked(threading.Lock(), "b.py:_lock")
+    with a:
+        assert held_keys() == ["a.py:_lock"]
+        with b:
+            assert held_keys() == ["a.py:_lock", "b.py:_lock"]
+    assert held_keys() == []
+    assert fresh_graph.edges() == {"a.py:_lock": {"b.py:_lock"}}
+
+
+def test_rlock_reentry_is_not_an_edge(fresh_graph):
+    r = _Tracked(threading.RLock(), "x.py:_lock")
+    with r:
+        with r:
+            assert held_keys() == ["x.py:_lock", "x.py:_lock"]
+    assert held_keys() == []
+    assert fresh_graph.edges() == {}
+    assert fresh_graph.violations == []
+
+
+def test_condition_wait_releases_held_stack(fresh_graph):
+    c = _TrackedCondition(threading.Condition(), "p.py:_cond")
+    with c:
+        c.wait(timeout=0.01)
+        # re-acquired on wakeup: exactly one frame, not zero, not two
+        assert held_keys() == ["p.py:_cond"]
+    assert held_keys() == []
+    fresh_graph.assert_clean()
+
+
+def test_admin_under_lock_violation(fresh_graph):
+    data = _Tracked(threading.Lock(), "router.py:_lock")
+    admin = _Tracked(threading.RLock(), "router.py:_admin")
+    with data:
+        with admin:
+            pass
+    kinds = [v.kind for v in fresh_graph.violations]
+    assert kinds == ["admin-under-lock"]
+    assert fresh_graph.violations[0].held == ("router.py:_lock",)
+    with pytest.raises(LockOrderError, match="admin-under-lock"):
+        fresh_graph.assert_clean()
+
+
+def test_admin_as_outermost_is_clean(fresh_graph):
+    data = _Tracked(threading.Lock(), "router.py:_lock")
+    admin = _Tracked(threading.RLock(), "router.py:_admin")
+    with admin:
+        with data:
+            pass
+    fresh_graph.assert_clean()
+
+
+def test_telemetry_locks_are_leaves(fresh_graph):
+    metrics = _Tracked(threading.Lock(), "metrics.py:_lock")
+    pool = _Tracked(threading.Lock(), "pool.py:_cond")
+    with metrics:
+        with pool:
+            pass
+    assert [v.kind for v in fresh_graph.violations] == ["telemetry-leaf"]
+
+
+def test_same_class_different_instance_nesting(fresh_graph):
+    p1 = _Tracked(threading.Condition(), "pool.py:_cond")
+    p2 = _Tracked(threading.Condition(), "pool.py:_cond")
+    with p1:
+        with p2:
+            pass
+    assert [v.kind for v in fresh_graph.violations] == ["same-class-nesting"]
+
+
+# ---------------------------------------------------------------------------
+# install(): creation-site interception
+
+
+def test_install_tracks_fabric_locks_only(installed):
+    from repro.core.pool import InstancePool
+
+    pool = InstancePool(_spec())
+    assert isinstance(pool._cond, _TrackedCondition)
+    assert pool._cond.key == "pool.py:_cond"
+    # locks created outside repro (this test file) stay plain
+    plain = threading.Lock()
+    assert not isinstance(plain, _Tracked)
+    pool.close()
+
+
+def test_install_names_admin_and_data_locks_apart(installed):
+    from repro.cluster.router import ClusterRouter
+    from repro.cluster.worker import ClusterWorker
+
+    router = ClusterRouter([ClusterWorker(0)])
+    assert router._admin.key == "router.py:_admin"
+    assert router._lock.key == "router.py:_lock"
+    router.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# fabric scenarios
+
+
+def _spec(name="f", app="app"):
+    return FunctionSpec(name, lambda ctx, args: args, app=app)
+
+
+def test_scheduler_hammer_graph_stays_acyclic(installed):
+    """60 threads through the fast path + async waiters: the observed
+    class-level acquisition order must be a DAG and violation-free."""
+    base_violations = len(installed.violations)
+    sched = FreshenScheduler()
+    sched.register(_spec())
+    errors = []
+
+    def worker(i):
+        try:
+            for j in range(20):
+                fut = sched.invoke("f", (i, j))
+                assert fut == (i, j)
+        except Exception as exc:            # noqa: BLE001
+            errors.append(exc)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(60)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    sched.shutdown()
+
+    assert not errors
+    edges = installed.edges()
+    assert "pool.py:_cond" in edges          # the hammer exercised the pool
+    assert installed.violations[base_violations:] == []
+    installed.assert_acyclic()
+
+
+def test_router_lifecycle_admin_is_outermost(installed):
+    """Register / submit / add_worker / drain / shutdown: ``_admin`` must
+    appear only as a graph *source* — never acquired under any other
+    fabric lock — and the whole graph must stay acyclic."""
+    from repro.cluster.router import ClusterRouter
+    from repro.cluster.worker import ClusterWorker
+
+    base_violations = len(installed.violations)
+    router = ClusterRouter([ClusterWorker(0), ClusterWorker(1)])
+    router.register(_spec())
+    futs = [router.submit("f", i) for i in range(50)]
+    done, not_done = wait(futs, timeout=30)
+    assert not not_done
+    added = router.add_worker()
+    router.remove_worker(added.shard_id, drain=True)
+    router.shutdown()
+
+    edges = installed.edges()
+    assert "router.py:_admin" in edges       # control plane was exercised
+    under_admin = {dst for dsts in edges.values() for dst in dsts}
+    assert "router.py:_admin" not in under_admin
+    assert installed.violations[base_violations:] == []
+    installed.assert_acyclic()
